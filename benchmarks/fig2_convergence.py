@@ -1,0 +1,41 @@
+"""Paper Fig. 2: relative error + residual per ALS iteration, dense
+(Alg. 1) vs. sparsity-enforced U at 55 nonzeros (Alg. 2), Reuters scale,
+five topics."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import als_nmf, enforced_sparsity_nmf
+from benchmarks.common import reuters_like, u0_for
+
+
+def run(iters: int = 75, small: bool = False):
+    a, _ = reuters_like()
+    u0 = u0_for(a, k=5)
+    if small:
+        iters = 20
+    dense = als_nmf(a, u0, iters=iters)
+    sparse = enforced_sparsity_nmf(a, u0, t_u=55, iters=iters)
+    rows = []
+    for it in range(iters):
+        rows.append({
+            "iteration": it,
+            "dense_error": float(dense.error[it]),
+            "dense_residual": float(dense.residual[it]),
+            "sparseU_error": float(sparse.error[it]),
+            "sparseU_residual": float(sparse.residual[it]),
+        })
+    derived = {
+        "final_dense_error": float(dense.error[-1]),
+        "final_sparse_error": float(sparse.error[-1]),
+        "sparse_nnz_u": int(sparse.nnz_u[-1]),
+        # paper claim: enforced-sparse converges at least as fast (residual)
+        "sparse_resid_leq_dense": bool(sparse.residual[-1] <= dense.residual[-1] * 1.5),
+        "sparse_error_geq_dense": bool(sparse.error[-1] >= dense.error[-1] - 1e-3),
+    }
+    return rows, derived
+
+
+if __name__ == "__main__":
+    rows, derived = run()
+    print(derived)

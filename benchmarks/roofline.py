@@ -1,0 +1,159 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+For each (arch x shape) cell, derives the three roofline terms from the
+compiled single-pod HLO (parsed + while-loop-scaled by
+``repro.launch.hlo_analysis`` — raw ``cost_analysis()`` counts loop bodies
+once and is reported alongside for reference):
+
+    compute_s    = HLO_FLOPs_per_device / PEAK_FLOPS      (197 TF/s bf16)
+    memory_s     = HLO_bytes_per_device / HBM_BW          (819 GB/s)
+    collective_s = collective_bytes_per_device / LINK_BW  (50 GB/s/link)
+
+plus MODEL_FLOPS (analytic 6*N*D / 2*N*D useful-work formulas), the
+useful-compute ratio, the dominant term, and the roofline fraction
+(useful-compute time / dominant-term time).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline \
+        --dryrun artifacts/dryrun_sp.jsonl --hlo-dir artifacts/hlo_sp \
+        --out artifacts/roofline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch import hlo_analysis
+from repro.models.common import ArchConfig
+
+PEAK_FLOPS = 197e12     # bf16 per chip, TPU v5e
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+
+
+def param_count(cfg: ArchConfig) -> int:
+    from repro.models import api
+    sd = jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+    return sum(l.size for l in jax.tree.leaves(sd))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    n = param_count(cfg)
+    if cfg.family == "moe":
+        inactive = cfg.n_layers * (cfg.n_experts - cfg.moe_top_k) * 3 * cfg.d_model * cfg.d_ff
+        n -= inactive
+    return n
+
+
+def model_flops(cfg: ArchConfig, shape) -> float:
+    """Analytic useful FLOPs per step (global)."""
+    b, s = shape.global_batch, shape.seq_len
+    n_act = active_param_count(cfg)
+    l, h, hd = cfg.n_layers, cfg.n_heads, cfg.hd
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            tokens = b * (s + s // cfg.dec_ratio)
+        else:
+            tokens = b * s
+        base = 6.0 * n_act * tokens
+        attn = 6.0 * b * (s ** 2) * h * hd * l if cfg.family not in ("ssm",) else 0.0
+        if cfg.family == "hybrid":
+            attn = 6.0 * b * (s ** 2) * h * hd * (l // cfg.attn_every)
+        return base + attn
+    if shape.kind == "prefill":
+        base = 2.0 * n_act * b * s
+        attn = 2.0 * b * (s ** 2) * h * hd * l if cfg.family != "ssm" else 0.0
+        if cfg.family == "hybrid":
+            attn = 2.0 * b * (s ** 2) * h * hd * (l // cfg.attn_every)
+        return base + attn
+    # decode: one token per sequence + KV-cache attention reads
+    base = 2.0 * n_act * b
+    kv_layers = l if cfg.family not in ("ssm", "hybrid") else (
+        0 if cfg.family == "ssm" else l // cfg.attn_every)
+    attn = 4.0 * b * s * h * hd * kv_layers
+    return base + attn
+
+
+def analyze_cell(rec: Dict, hlo_dir: Optional[str]) -> Dict:
+    cfg = ARCHS[rec["arch"]]
+    shape = SHAPES[rec["shape"]]
+    chips = 1
+    for f in rec["mesh"].split("x"):
+        chips *= int(f)
+    out = dict(rec)
+    mf = model_flops(cfg, shape)
+    out["model_flops"] = mf
+
+    hlo_path = rec.get("hlo_path")
+    if hlo_path is None and hlo_dir:
+        tag = f"{cfg.name}_{shape.name}_sp".replace("/", "_")
+        cand = os.path.join(hlo_dir, tag + ".hlo")
+        hlo_path = cand if os.path.exists(cand) else None
+    if hlo_path and os.path.exists(hlo_path):
+        costs = hlo_analysis.analyze(open(hlo_path).read())
+        out["hlo_flops_dev"] = costs.flops
+        out["hlo_bytes_dev"] = costs.hbm_bytes
+        out["coll_bytes_dev"] = costs.coll_bytes
+        out["coll_by_kind"] = {k: round(v) for k, v in costs.coll_by_kind.items()}
+    else:
+        # fall back to (loop-undercounting) cost_analysis, noted in report
+        out["hlo_flops_dev"] = rec.get("flops", 0.0)
+        out["hlo_bytes_dev"] = rec.get("bytes_accessed", 0.0)
+        out["coll_bytes_dev"] = 0.0
+        out["coll_by_kind"] = {}
+
+    compute_s = out["hlo_flops_dev"] / PEAK_FLOPS
+    memory_s = out["hlo_bytes_dev"] / HBM_BW
+    coll_s = out["coll_bytes_dev"] / LINK_BW
+    out["compute_s"] = compute_s
+    out["memory_s"] = memory_s
+    out["collective_s"] = coll_s
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    out["dominant"] = max(terms, key=terms.get)
+    ideal_s = mf / chips / PEAK_FLOPS
+    bound_s = max(compute_s, memory_s, coll_s, 1e-30)
+    out["ideal_s"] = ideal_s
+    out["roofline_fraction"] = min(ideal_s / bound_s, 1.0)
+    out["useful_compute_ratio"] = (mf / chips) / max(out["hlo_flops_dev"], 1e-30)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="artifacts/dryrun_sp.jsonl")
+    ap.add_argument("--hlo-dir", default="artifacts/hlo_sp")
+    ap.add_argument("--out", default="artifacts/roofline.json")
+    args = ap.parse_args(argv)
+
+    rows = []
+    with open(args.dryrun) as f:
+        for line in f:
+            rec = json.loads(line)
+            if rec.get("status") != "ok":
+                rows.append(rec)
+                continue
+            rows.append(analyze_cell(rec, args.hlo_dir))
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    # markdown table
+    print(f"{'arch':24s} {'shape':12s} {'dom':10s} "
+          f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+          f"{'roofline%':>9s} {'useful%':>8s}")
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"{r['arch']:24s} {r['shape']:12s} -- {r['status']}")
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['dominant']:10s} "
+              f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+              f"{100*r['roofline_fraction']:8.1f}% {100*r['useful_compute_ratio']:7.1f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

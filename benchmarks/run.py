@@ -1,0 +1,77 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call measured over the
+figure's core computation where timing is meaningful; the paper-claim
+checks land in the derived column).
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+``--full`` runs paper-scale matrices (minutes on CPU); the default runs
+reduced-scale variants of every figure (CI-friendly).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _run_fig(name, fn, small):
+    t0 = time.perf_counter()
+    rows, derived = fn(small=small)
+    dt = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{dt:.0f},{json.dumps(derived)}")
+    return derived
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    small = not args.full
+
+    from benchmarks import (
+        fig2_convergence, fig3_sweep, fig45_accuracy, fig6_memory,
+        fig7_distribution, fig9_timing, ablation_topk,
+    )
+
+    print("name,us_per_call,derived")
+    checks = {}
+    checks["fig2_convergence"] = _run_fig("fig2_convergence", fig2_convergence.run, small)
+    checks["fig3_sweep"] = _run_fig("fig3_sweep", fig3_sweep.run, small)
+    checks["fig45_accuracy"] = _run_fig("fig45_accuracy", fig45_accuracy.run, small)
+    checks["fig6_memory"] = _run_fig("fig6_memory", fig6_memory.run, small)
+    checks["fig7_distribution"] = _run_fig("fig7_distribution", fig7_distribution.run, small)
+    checks["fig9_timing"] = _run_fig("fig9_timing", fig9_timing.run, small)
+    checks["ablation_topk"] = _run_fig("ablation_topk", ablation_topk.run, small)
+
+    # paper-claim summary
+    claims = {
+        "fig2: enforced-sparse converges (residual <= ~dense)":
+            checks["fig2_convergence"]["sparse_resid_leq_dense"],
+        "fig2: sparse run has higher numerical error (paper §3.1)":
+            checks["fig2_convergence"]["sparse_error_geq_dense"],
+        "fig3: very sparse converges at least as fast":
+            checks["fig3_sweep"]["sparse_converges_faster"],
+        "fig5: enforce-during ~= enforce-after accuracy":
+            checks["fig45_accuracy"]["during_geq_after_mostly"],
+        "fig6: >=10x max-NNZ memory saving at tight t":
+            checks["fig6_memory"]["order_of_magnitude_saving"],
+        "fig7: column-wise enforcement spreads nonzeros evenly":
+            checks["fig7_distribution"]["columnwise_even"],
+        "fig9: sequential ALS fastest":
+            checks["fig9_timing"]["sequential_fastest"],
+        "ablation: exact == bisection == histogram top-t":
+            checks["ablation_topk"]["all_thresholds_agree"],
+    }
+    print("\n== paper claims ==", file=sys.stderr)
+    ok = True
+    for claim, passed in claims.items():
+        print(f"  [{'PASS' if passed else 'WARN'}] {claim}", file=sys.stderr)
+        ok = ok and passed
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,79 @@
+"""End-to-end driver (the paper's kind: large-scale topic modeling).
+
+Pipeline: corpus -> term/document matrix -> enforced-sparsity ALS for a few
+hundred iterations, with periodic compressed-sparse checkpointing and
+restart support -- the NMF analogue of a production training run.
+
+    PYTHONPATH=src python examples/topic_modeling_pipeline.py \
+        [--terms 20112 --docs 7510 --iters 200 --ckpt /tmp/nmf_ckpt]
+"""
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (
+    save_nmf_factors_sparse, restore_nmf_factors_sparse,
+)
+from repro.core import enforced_sparsity_nmf, init_u0
+from repro.core.metrics import mean_clustering_accuracy
+from repro.data import synthetic_journal_corpus
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--terms", type=int, default=4000)
+    ap.add_argument("--docs", type=int, default=1500)
+    ap.add_argument("--topics", type=int, default=5)
+    ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--rounds", type=int, default=4,
+                    help="checkpoint rounds (iters split across them)")
+    ap.add_argument("--t-u", type=int, default=500)
+    ap.add_argument("--t-v", type=int, default=3000)
+    ap.add_argument("--ckpt", default="/tmp/nmf_pipeline_ckpt")
+    args = ap.parse_args()
+
+    print("== stage 1: corpus -> matrix ==")
+    t0 = time.time()
+    a, dj = synthetic_journal_corpus(
+        n_terms=args.terms, n_docs=args.docs, n_journals=args.topics, seed=0)
+    print(f"   {a.shape[0]}x{a.shape[1]}, nnz={int(a.nnz())} "
+          f"({time.time()-t0:.1f}s)")
+
+    print("== stage 2: enforced-sparsity ALS with checkpoint/restart ==")
+    os.makedirs(args.ckpt, exist_ok=True)
+    ck_path = os.path.join(args.ckpt, "factors.npz")
+    if os.path.exists(ck_path):
+        u, _ = restore_nmf_factors_sparse(ck_path)
+        print(f"   resuming from {ck_path}")
+        u0 = jnp.maximum(u, 0) + 1e-6  # resume from checkpointed U
+    else:
+        u0 = init_u0(jax.random.PRNGKey(0), args.terms, args.topics)
+
+    per_round = args.iters // args.rounds
+    for rnd in range(args.rounds):
+        t0 = time.time()
+        res = enforced_sparsity_nmf(
+            a, u0, t_u=args.t_u, t_v=args.t_v, iters=per_round)
+        jax.block_until_ready(res.u)
+        sizes = save_nmf_factors_sparse(ck_path, res.u, res.v)
+        u0 = res.u
+        print(f"   round {rnd+1}/{args.rounds}: "
+              f"err={float(res.error[-1]):.4f} "
+              f"resid={float(res.residual[-1]):.2e} "
+              f"nnz(U)={int(res.nnz_u[-1])} "
+              f"ckpt={sum(sizes.values())//1024}KB "
+              f"({time.time()-t0:.1f}s)")
+
+    print("== stage 3: evaluation ==")
+    acc = mean_clustering_accuracy(jnp.asarray(dj), res.v, args.topics)
+    print(f"   clustering accuracy (Eq. 3.3): {float(acc):.3f}")
+    print(f"   memory: max stored NNZ {int(res.max_nnz)} vs dense "
+          f"{(args.terms+args.docs)*args.topics} "
+          f"({(args.terms+args.docs)*args.topics/max(int(res.max_nnz),1):.1f}x saving)")
+
+
+if __name__ == "__main__":
+    main()

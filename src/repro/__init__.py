@@ -1,0 +1,6 @@
+"""repro: Enforced Sparse NMF at scale (JAX + Pallas/TPU).
+
+Paper: Gavin, Gadepally, Kepner — "Enforced Sparse Non-Negative Matrix
+Factorization" (IPDPSW, DOI 10.1109/IPDPSW.2016.58).  See DESIGN.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,17 @@
+from repro.checkpoint.store import (
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+    AsyncCheckpointer,
+    save_nmf_factors_sparse,
+    restore_nmf_factors_sparse,
+)
+
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "AsyncCheckpointer",
+    "save_nmf_factors_sparse",
+    "restore_nmf_factors_sparse",
+]

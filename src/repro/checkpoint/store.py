@@ -1,0 +1,159 @@
+"""Checkpoint store: atomic step-indexed save/restore with elastic
+resharding, async host write, and compressed top-t NMF factor storage.
+
+Fault-tolerance contract (DESIGN.md §4):
+
+* **Atomicity** — writes go to ``step_N.tmp/`` and are renamed into place;
+  a crash mid-write never corrupts the latest checkpoint.
+* **Restart** — ``latest_step`` + ``restore_checkpoint`` resume from the
+  newest complete checkpoint (the train loop in ``launch/train.py`` calls
+  this on startup, so a rescheduled job continues where the failed one
+  left off).
+* **Elasticity** — arrays are saved *unsharded* (gathered via
+  ``jax.device_get``, per-host in a multi-host run) and restored with
+  ``jax.device_put(x, sharding)`` against whatever mesh the restarted job
+  has; any divisor layout works, so scaling from 512 to 256 chips between
+  restarts is a restore-time concern only.
+* **NMF factors** — stored in the paper's compressed top-t form
+  (values + flat indices), which is the memory claim of Alg. 2 made
+  durable: a k=5 factor pair with t=55 nonzeros costs ~1KB regardless of
+  (n, m).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+def _flatten_with_names(tree: Params):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+             for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Params) -> str:
+    """Atomic save of an arbitrary pytree of arrays."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    names, leaves, _ = _flatten_with_names(tree)
+    arrays = {}
+    dtypes = []
+    for i, l in enumerate(leaves):
+        a = np.asarray(jax.device_get(l))
+        dtypes.append(str(a.dtype))
+        if a.dtype.name == "bfloat16":  # npz has no bf16: store the bits
+            a = a.view(np.uint16)
+        arrays[f"a{i}"] = a
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "names": names, "dtypes": dtypes}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            try:
+                steps.append(int(d.split("_")[1]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Params,
+                       shardings: Optional[Params] = None) -> Params:
+    """Restore into the structure of ``like``; ``shardings`` (a pytree of
+    ``jax.sharding.Sharding``) reshards onto the *current* mesh — elastic
+    restarts pass the new mesh's shardings here."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = [data[f"a{i}"] for i in range(len(data.files))]
+    for i, dt in enumerate(manifest.get("dtypes", [])):
+        if dt == "bfloat16":
+            import ml_dtypes
+            arrays[i] = arrays[i].view(ml_dtypes.bfloat16)
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    assert len(arrays) == len(flat_like), (
+        f"checkpoint has {len(arrays)} leaves, expected {len(flat_like)}"
+    )
+    if shardings is not None:
+        flat_sh = treedef.flatten_up_to(shardings)
+        arrays = [jax.device_put(a, s) for a, s in zip(arrays, flat_sh)]
+    else:
+        arrays = [jnp.asarray(a) for a in arrays]
+    return treedef.unflatten(arrays)
+
+
+class AsyncCheckpointer:
+    """Overlaps the host-side write with continued training: ``save`` blocks
+    only for the device->host gather, then writes on a daemon thread.
+    ``wait`` joins the in-flight write (call before exit / next save)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Params):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._thread = threading.Thread(
+            target=save_checkpoint, args=(self.ckpt_dir, step, host_tree), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+# ---------------------------------------------------------------------------
+# Paper-specific: compressed sparse factor storage
+# ---------------------------------------------------------------------------
+
+def save_nmf_factors_sparse(path: str, u: jax.Array, v: jax.Array) -> dict:
+    """Store U, V in top-t compressed form: (flat indices, values)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    out = {}
+    for name, mat in (("u", u), ("v", v)):
+        mat = np.asarray(jax.device_get(mat))
+        idx = np.flatnonzero(mat)
+        out[f"{name}_idx"] = idx.astype(np.int64)
+        out[f"{name}_val"] = mat.ravel()[idx]
+        out[f"{name}_shape"] = np.asarray(mat.shape)
+    np.savez(path, **out)
+    return {k: v.nbytes for k, v in out.items()}
+
+
+def restore_nmf_factors_sparse(path: str) -> Tuple[jax.Array, jax.Array]:
+    with np.load(path) as d:
+        mats = []
+        for name in ("u", "v"):
+            shape = tuple(d[f"{name}_shape"])
+            flat = np.zeros(int(np.prod(shape)), np.float32)
+            flat[d[f"{name}_idx"]] = d[f"{name}_val"]
+            mats.append(jnp.asarray(flat.reshape(shape)))
+    return mats[0], mats[1]

@@ -1,0 +1,16 @@
+"""Core: the paper's contribution — projected ALS NMF with enforced sparsity."""
+from repro.core.nmf import NMFResult, als_nmf, init_u0, solve_gram
+from repro.core.enforced import (
+    enforced_sparsity_nmf,
+    global_topt,
+    global_topt_exact,
+    columnwise_topt,
+)
+from repro.core.sequential import SequentialResult, sequential_als_nmf
+from repro.core import metrics, topk
+
+__all__ = [
+    "NMFResult", "als_nmf", "init_u0", "solve_gram",
+    "enforced_sparsity_nmf", "global_topt", "global_topt_exact", "columnwise_topt",
+    "SequentialResult", "sequential_als_nmf", "metrics", "topk",
+]

@@ -1,0 +1,16 @@
+from repro.data.textpipe import (
+    build_term_document_matrix,
+    normalize_rows_by_nnz,
+    tokenize,
+    STOPWORDS,
+)
+from repro.data.synthetic import synthetic_corpus_matrix, synthetic_journal_corpus
+
+__all__ = [
+    "build_term_document_matrix",
+    "normalize_rows_by_nnz",
+    "tokenize",
+    "STOPWORDS",
+    "synthetic_corpus_matrix",
+    "synthetic_journal_corpus",
+]

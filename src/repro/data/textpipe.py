@@ -1,0 +1,81 @@
+"""Text -> term/document matrix pipeline (paper §3).
+
+Each column of A is a document, each row a term; ``a_ij`` is the count of
+term i in document j.  Terms on the stop-word list and terms occurring only
+once in the whole corpus are discarded; each row is divided by its NNZ to
+de-bias common terms (all per paper §3).
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.sparse.csr import SpCSR, from_coo
+
+# A compact English stop-word list (the paper uses "a stop word list").
+STOPWORDS = frozenset(
+    """a about above after again against all am an and any are as at be because
+    been before being below between both but by could did do does doing down
+    during each few for from further had has have having he her here hers him
+    his how i if in into is it its just me more most my no nor not of off on
+    once only or other our out over own same she should so some such than that
+    the their them then there these they this those through to too under until
+    up very was we were what when where which while who whom why will with you
+    your said say says would also may can one two new us mr mrs""".split()
+)
+
+_TOKEN_RE = re.compile(r"[a-z][a-z'-]+")
+
+
+def tokenize(text: str) -> List[str]:
+    return [t for t in _TOKEN_RE.findall(text.lower()) if t not in STOPWORDS]
+
+
+def build_term_document_matrix(
+    documents: Sequence[str],
+    min_count: int = 2,
+    cap: int | None = None,
+) -> Tuple[SpCSR, Dict[str, int]]:
+    """Build the (terms x documents) count matrix as padded CSR.
+
+    Returns (A, vocab) where vocab maps term -> row index.  Terms appearing
+    fewer than ``min_count`` times in the corpus are dropped (paper drops
+    terms that appear only once).
+    """
+    tokenized = [tokenize(d) for d in documents]
+    corpus_counts: Counter = Counter()
+    for toks in tokenized:
+        corpus_counts.update(toks)
+    vocab = {
+        t: i
+        for i, (t, c) in enumerate(
+            sorted((t, c) for t, c in corpus_counts.items() if c >= min_count)
+        )
+    }
+    rows, cols, vals = [], [], []
+    for j, toks in enumerate(tokenized):
+        counts = Counter(t for t in toks if t in vocab)
+        for t, c in counts.items():
+            rows.append(vocab[t])
+            cols.append(j)
+            vals.append(float(c))
+    n, m = len(vocab), len(documents)
+    a = from_coo(
+        np.array(rows, np.int64),
+        np.array(cols, np.int64),
+        np.array(vals, np.float32),
+        (n, m),
+        cap=cap,
+    )
+    return normalize_rows_by_nnz(a), vocab
+
+
+def normalize_rows_by_nnz(a: SpCSR) -> SpCSR:
+    """Divide each row by its NNZ (paper §3: de-bias common terms)."""
+    import jax.numpy as jnp
+
+    row_nnz = jnp.maximum(jnp.sum(a.values != 0, axis=1, keepdims=True), 1)
+    return SpCSR(a.values / row_nnz, a.cols, a.shape)

@@ -1,0 +1,114 @@
+"""Pallas TPU flash attention (online-softmax, causal, GQA-aware).
+
+The §Perf analysis (EXPERIMENTS.md pair 2) shows unfused attention softmax
+dominating the HBM term at 4k-32k sequence: every (B,H,Sq,T) fp32
+intermediate makes a round trip.  This kernel keeps the running max/sum and
+the (bq, hd) accumulator in VMEM scratch across KV blocks — HBM traffic
+drops to exactly one read of Q,K,V and one write of O.
+
+GQA: the K/V BlockSpec index_map divides the head index by the group size,
+so KV heads are never materialized at Q-head multiplicity (the pure-XLA
+path pays that repeat).
+
+Layout: grid (B, H, Sq/bq, T/bk), KV-block innermost; scratch persists
+across the innermost dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, causal: bool, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                  # (bq, hd)
+    k = k_ref[0, 0]                                  # (bk, hd)
+    v = v_ref[0, 0]                                  # (bk, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bk)
+    if causal:
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "bq", "bk", "groups", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,            # (B, H, Sq, hd)
+    k: jax.Array,            # (B, Hkv, T, hd)
+    v: jax.Array,            # (B, Hkv, T, hd)
+    causal: bool = True,
+    bq: int = 512,
+    bk: int = 512,
+    groups: int = 1,         # H // Hkv
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, hd = q.shape
+    t = k.shape[2]
+    bq = min(bq, sq)
+    bk = min(bk, t)
+    while sq % bq:
+        bq //= 2
+    while t % bk:
+        bk //= 2
+    scale = hd ** -0.5
+    grid = (b, h, sq // bq, t // bk)
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b_, h_, iq, ik: (b_, h_ // groups, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b_, h_, iq, ik: (b_, h_ // groups, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

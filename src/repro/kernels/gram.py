@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: Gram matrix  G = U^T U  by row-block accumulation.
+
+U is (n, k) with n huge and k small: the natural TPU schedule streams
+(bm, k) row slabs of U through VMEM once and accumulates the k x k product
+on the MXU — HBM traffic is exactly one read of U (n*k) plus one k*k write,
+the roofline minimum.  Used for both ``U^T U`` and ``V^T V`` in every ALS
+iteration.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(u_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[...]
+    out_ref[...] += jnp.dot(u.T, u, preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def gram(u: jax.Array, bm: int = 512, interpret: bool = False) -> jax.Array:
+    """U^T @ U for (n, k) U, accumulated over (bm, k) VMEM slabs."""
+    n, k = u.shape
+    n_pad = (-n) % bm
+    u_p = jnp.pad(u, ((0, n_pad), (0, 0)))
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=(u_p.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((k, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        interpret=interpret,
+    )(u_p)
+    return out

@@ -1,0 +1,48 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernel bodies then execute in Python for correctness validation) and False
+on real TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.bsr import BSR, bsr_from_dense, bsr_to_dense, bsr_transpose
+from repro.kernels.bsr_spmm import bsr_spmm
+from repro.kernels.project_mask import project_mask
+from repro.kernels.gram import gram
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spmm(a: BSR, u: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """dense(A) @ U via the BSR Pallas kernel."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return bsr_spmm(a, u, interpret=interpret)
+
+
+def fused_project_mask(x: jax.Array, tau: jax.Array, interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = _default_interpret()
+    return project_mask(x, tau, interpret=interpret)
+
+
+def gram_matrix(u: jax.Array, interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = _default_interpret()
+    return gram(u, interpret=interpret)
+
+
+__all__ = [
+    "BSR",
+    "bsr_from_dense",
+    "bsr_to_dense",
+    "bsr_transpose",
+    "spmm",
+    "fused_project_mask",
+    "gram_matrix",
+]

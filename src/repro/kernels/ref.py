@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bsr import BSR, bsr_to_dense
+
+
+def bsr_spmm_ref(a: BSR, u: jax.Array) -> jax.Array:
+    """dense(A) @ U."""
+    return bsr_to_dense(a).astype(u.dtype) @ u
+
+
+def project_mask_ref(x: jax.Array, tau: jax.Array) -> jax.Array:
+    y = jnp.maximum(x, 0.0)
+    return jnp.where(y >= tau.astype(x.dtype), y, 0.0)
+
+
+def gram_ref(u: jax.Array) -> jax.Array:
+    return (u.astype(jnp.float32)).T @ u.astype(jnp.float32)

@@ -1,0 +1,4 @@
+# NOTE: do not import repro.launch.dryrun from here — it sets XLA_FLAGS at
+# import time and must only be imported as __main__ (or deliberately).
+from repro.launch.mesh import make_production_mesh, make_local_mesh
+__all__ = ["make_production_mesh", "make_local_mesh"]

@@ -1,0 +1,397 @@
+"""HLO-text analysis: loop-aware FLOPs / HBM-bytes / collective-bytes.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE (verified on this
+jax build), which silently undercounts scan-over-layers models by ~L x.
+This module parses ``compiled.as_text()`` (the post-SPMD, per-device
+module), builds the computation call graph, and scales every while-body's
+costs by the loop trip count (recovered from the loop-condition's compare
+constant — scan lowers to a canonical ``lt(iv, K)`` condition).
+
+Per-device accounting:
+* flops        — 2*M*N*K for every dot (batch dims included), plus
+                 convolution FLOPs; elementwise ops are ignored (matmul-
+                 dominated workloads; documented in EXPERIMENTS.md).
+* hbm_bytes    — sum of operand+result bytes of top-level ops in each
+                 computation.  Fusion computations are treated as single
+                 ops (their internals live in registers/VMEM on TPU), so
+                 this approximates HBM traffic at fusion boundaries.
+* coll_bytes   — operand bytes of all-gather / all-reduce / reduce-scatter
+                 / all-to-all / collective-permute (max of operand/result,
+                 i.e. the amount that crosses the links at least once).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO type string (tuples summed)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class OpRecord:
+    name: str
+    opcode: str
+    line: str
+    result_type: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpRecord]
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-~]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_OP_START = re.compile(r"^\s*(?:ROOT\s+)?%[\w.\-~]+\s*=")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-~]+)\s*=\s*"
+    r"((?:\((?:[^()]|\([^()]*\))*\)|[\w\[\],{}\/* ]+?))\s+"
+    r"([\w\-]+)\("
+)
+
+
+_HEADER_NAME = re.compile(r"^(ENTRY\s+)?%?([\w.\-~]+)\s*\(")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    """Computation headers wrap across lines in real HLO dumps — join
+    pending lines until one ends with '{' before extracting the name."""
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry: Optional[str] = None
+    header_buf: List[str] = []
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            if not line.strip():
+                header_buf = []
+                continue
+            header_buf.append(line.strip())
+            if line.endswith("{"):
+                joined = " ".join(header_buf)
+                header_buf = []
+                m = _HEADER_NAME.match(joined)
+                if m:
+                    current = Computation(m.group(2), [])
+                    if m.group(1):
+                        entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        if _OP_START.match(line):
+            m = _OP_LINE.match(line)
+            if m:
+                current.ops.append(OpRecord(m.group(1), m.group(3), line, m.group(2)))
+        elif current.ops:
+            # continuation of a wrapped op line (huge tuple types etc.):
+            # append and reparse the opcode in case it appears past the wrap
+            op = current.ops[-1]
+            op.line = op.line + " " + line.strip()
+            m = _OP_LINE.match(op.line)
+            if m:
+                op.opcode = m.group(3)
+                op.result_type = m.group(2)
+    return comps, entry
+
+
+_OPERANDS_RE = re.compile(r"\(\s*%?([\w.\-~]+)(?:\s*,\s*%?([\w.\-~]+))?")
+
+
+def _dot_flops(line: str, result_type: str, type_of: Dict[str, str]) -> float:
+    """2 * prod(result_dims) * K for a dot; K from the lhs contracting dims.
+
+    Scheduled HLO prints operand *names* only, so lhs dims come from the
+    module-wide name -> result-type table.
+    """
+    # operand types may appear inline (unscheduled HLO) or by name lookup
+    inner = line.split("(", 1)[1]
+    shapes = _SHAPE_RE.findall(inner.split("lhs_contracting")[0])
+    lhs_dims: List[int] = []
+    if shapes:
+        lhs_dims = [int(d) for d in shapes[0][1].split(",") if d]
+    else:
+        mo = _OPERANDS_RE.search(line[line.index("("):])
+        if mo:
+            lhs_type = type_of.get(mo.group(1), "")
+            _, lhs_dims = _shape_dims(lhs_type)
+    mcon = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    k = 1
+    if mcon and lhs_dims:
+        for idx in mcon.group(1).split(","):
+            if idx:
+                k *= lhs_dims[int(idx)]
+    elif not lhs_dims:
+        return 0.0
+    _, res_dims = _shape_dims(result_type)
+    n_res = 1
+    for d in res_dims:
+        n_res *= d
+    return 2.0 * n_res * k
+
+
+def _conv_flops(line: str, result_type: str, type_of: Dict[str, str]) -> float:
+    # rough: 2 * prod(result) * prod(kernel dims except output-feature)
+    inner = line.split("(", 1)[1]
+    shapes = _SHAPE_RE.findall(inner)
+    rhs_dims: List[int] = []
+    if len(shapes) >= 2:
+        rhs_dims = [int(d) for d in shapes[1][1].split(",") if d]
+    else:
+        mo = _OPERANDS_RE.search(line[line.index("("):])
+        if mo and mo.group(2):
+            _, rhs_dims = _shape_dims(type_of.get(mo.group(2), ""))
+    if not rhs_dims:
+        return 0.0
+    k = 1
+    for d in rhs_dims[:-1]:
+        k *= d
+    _, res_dims = _shape_dims(result_type)
+    n_res = 1
+    for d in res_dims:
+        n_res *= d
+    return 2.0 * n_res * k
+
+
+_CALLED_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-~]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-~]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition — scan lowers the
+    condition to ``lt(iv, K)`` so this recovers K.  Falls back to 1."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = _CONST_RE.search(op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+        m = _CONST_RE.search(op.line)
+        if m and "compare" in op.line:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __add__(self, o: "Costs") -> "Costs":
+        kinds = dict(self.coll_by_kind)
+        for k, v in o.coll_by_kind.items():
+            kinds[k] = kinds.get(k, 0.0) + v
+        return Costs(self.flops + o.flops, self.hbm_bytes + o.hbm_bytes,
+                     self.coll_bytes + o.coll_bytes, kinds)
+
+    def scale(self, f: float) -> "Costs":
+        return Costs(self.flops * f, self.hbm_bytes * f, self.coll_bytes * f,
+                     {k: v * f for k, v in self.coll_by_kind.items()})
+
+
+_OPERAND_NAMES_RE = re.compile(r"%([\w.\-~]+)")
+
+
+def _operand_bytes(line: str, type_of: Dict[str, str]) -> int:
+    """Sum bytes of named operands (first paren group of the op line)."""
+    try:
+        inner = line.split("(", 1)[1]
+    except IndexError:
+        return 0
+    # cut at the matching close paren (operands never nest parens)
+    inner = inner.split(")", 1)[0]
+    inline = _shape_bytes(inner)
+    if inline:
+        return inline
+    total = 0
+    for m in _OPERAND_NAMES_RE.finditer(inner):
+        total += _shape_bytes(type_of.get(m.group(1), ""))
+    return total
+
+
+def _operand_bytes_list(line: str, type_of: Dict[str, str]) -> List[int]:
+    try:
+        inner = line.split("(", 1)[1].split(")", 1)[0]
+    except IndexError:
+        return []
+    return [_shape_bytes(type_of.get(m.group(1), ""))
+            for m in _OPERAND_NAMES_RE.finditer(inner)]
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+_SLICE_OPS = ("dynamic-slice", "slice", "gather")
+
+
+def _fusion_hbm(op: OpRecord, comps: Dict[str, Computation],
+                type_of: Dict[str, str]) -> float:
+    """HBM bytes for a fusion: result + operands, where an operand that is
+    only *sliced* inside the fusion is charged at its slice size (TPU reads
+    just the slice; charging the full buffer overcounts scan bodies by the
+    sequence length)."""
+    result_b = _shape_bytes(op.result_type)
+    m = _CALLED_RE.search(op.line)
+    operand_b = _operand_bytes_list(op.line, type_of)
+    fc = comps.get(m.group(1)) if m else None
+    if fc is None:
+        return result_b + sum(operand_b)
+    # param name by index, and how each param is consumed
+    param_names = {}
+    for o in fc.ops:
+        if o.opcode == "parameter":
+            pm = _PARAM_IDX_RE.search(o.line)
+            if pm:
+                param_names[int(pm.group(1))] = o.name
+    local_types = dict(type_of)
+    for o in fc.ops:
+        local_types[o.name] = o.result_type
+    slice_charge: Dict[str, float] = {}
+    full_use: Dict[str, bool] = {}
+    root_is_dus = fc.ops and fc.ops[-1].opcode == "dynamic-update-slice"
+    for o in fc.ops:
+        if o.opcode == "parameter":
+            continue
+        try:
+            inner = o.line.split("(", 1)[1].split(")", 1)[0]
+        except IndexError:
+            continue
+        used = [mm.group(1) for mm in _OPERAND_NAMES_RE.finditer(inner)]
+        for i, u in enumerate(used):
+            if o.opcode in _SLICE_OPS and i == 0:
+                slice_charge[u] = max(slice_charge.get(u, 0.0),
+                                      float(_shape_bytes(o.result_type)))
+            elif o.opcode == "dynamic-update-slice" and i == 0 and len(used) > 1:
+                # in-place update: the target buffer is aliased; charge the
+                # touched region (update read + write)
+                upd_b = float(_shape_bytes(local_types.get(used[1], "")))
+                slice_charge[u] = max(slice_charge.get(u, 0.0), 2.0 * upd_b)
+            else:
+                full_use[u] = True
+    if root_is_dus:
+        result_b = 0  # write accounted via the update-region charge
+    total = float(result_b)
+    for idx, b in enumerate(operand_b):
+        pname = param_names.get(idx)
+        if pname is not None and pname in slice_charge and not full_use.get(pname):
+            total += slice_charge[pname]
+        else:
+            total += b
+    return total
+
+
+def analyze(text: str) -> Costs:
+    comps, entry = parse_hlo(text)
+    memo: Dict[str, Costs] = {}
+    type_of: Dict[str, str] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            type_of[op.name] = op.result_type
+
+    def comp_cost(name: str) -> Costs:
+        if name in memo:
+            return memo[name]
+        memo[name] = Costs()  # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return Costs()
+        total = Costs()
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                body_m = _CALLED_RE.search(op.line)
+                cond_m = _COND_RE.search(op.line)
+                if body_m:
+                    body_cost = comp_cost(body_m.group(1))
+                    trips = _trip_count(comps[cond_m.group(1)]) if (
+                        cond_m and cond_m.group(1) in comps) else 1
+                    total = total + body_cost.scale(trips)
+                continue
+            if oc == "conditional":
+                mb = _BRANCHES_RE.search(op.line)
+                if mb:
+                    branch_costs = [comp_cost(b.strip().lstrip("%"))
+                                    for b in mb.group(1).split(",")]
+                    if branch_costs:
+                        best = max(branch_costs, key=lambda c: c.flops + c.hbm_bytes)
+                        total = total + best
+                continue
+            if oc in ("call", "fusion", "custom-call", "async-start"):
+                m = _CALLED_RE.search(op.line)
+                if m and oc == "call":
+                    total = total + comp_cost(m.group(1))
+                    continue
+                if oc == "fusion" and m:
+                    # fusion: HBM traffic at boundary; flops from its dots
+                    inner = comp_cost(m.group(1))
+                    total = total + Costs(flops=inner.flops,
+                                          coll_bytes=inner.coll_bytes,
+                                          coll_by_kind=inner.coll_by_kind)
+            if oc in _COLLECTIVES:
+                b = float(max(_operand_bytes(op.line, type_of),
+                              _shape_bytes(op.result_type)))
+                total.coll_bytes += b
+                total.coll_by_kind[oc] = total.coll_by_kind.get(oc, 0.0) + b
+            if oc == "dot":
+                total.flops += _dot_flops(op.line, op.result_type, type_of)
+            elif oc == "convolution":
+                total.flops += _conv_flops(op.line, op.result_type, type_of)
+            # HBM traffic at op boundary (operands + result), skipping
+            # shape-only / control ops.  Slice-family ops only touch the
+            # slice, not the whole buffer (in-place on TPU via aliasing) —
+            # counting full operands would charge an S-length scan S x its
+            # sequence buffer (measured 500x overcount on sLSTM).
+            if oc in ("dynamic-slice", "gather"):
+                total.hbm_bytes += 2.0 * _shape_bytes(op.result_type)
+            elif oc in ("dynamic-update-slice", "scatter"):
+                opb = _operand_bytes_list(op.line, type_of)
+                upd = min(b for b in opb if b > 0) if any(opb) else 0
+                total.hbm_bytes += 2.0 * upd
+            elif oc == "fusion":
+                total.hbm_bytes += _fusion_hbm(op, comps, type_of)
+            elif oc not in ("parameter", "constant", "tuple",
+                            "get-tuple-element", "bitcast", "while",
+                            "conditional", "call"):
+                total.hbm_bytes += _operand_bytes(op.line, type_of)
+                total.hbm_bytes += _shape_bytes(op.result_type)
+        memo[name] = total
+        return total
+
+    if entry is None:
+        return Costs()
+    return comp_cost(entry)

@@ -1,0 +1,21 @@
+"""Production mesh definitions.
+
+A function (not module-level constant) so importing never touches jax
+device state.  Target: TPU v5e pods — 16x16 = 256 chips per pod; the
+multi-pod mesh adds a leading "pod" axis (2 pods = 512 chips) connected
+over DCN, used for pure data parallelism.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh for tests on however many devices exist."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,58 @@
+"""Serving launcher: bring up a ServingEngine for an architecture and run a
+synthetic request load (the serving analogue of launch/train.py).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        [--requests 16] [--max-batch 4] [--max-seq 128]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCHS, smoke_config
+from repro.models import api
+from repro.serving import Request, ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=sorted(ARCHS))
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced config (full configs need a TPU pod)")
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(ARCHS[args.arch]) if args.smoke else ARCHS[args.arch]
+    if cfg.family == "encdec":
+        raise SystemExit("enc-dec serving uses repro.models.encdec.prefill/"
+                         "decode_step directly (see tests)")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, max_batch=args.max_batch,
+                           max_seq=args.max_seq)
+    rng = jax.random.PRNGKey(1)
+    for rid in range(args.requests):
+        rng, k = jax.random.split(rng)
+        prompt = jax.random.randint(k, (8,), 3, cfg.vocab).tolist()
+        engine.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new))
+
+    t0 = time.time()
+    ticks = 0
+    emitted_total = 0
+    while engine.queue or any(s is not None for s in engine.slots):
+        emitted_total += len(engine.step())
+        ticks += 1
+        if ticks > 10_000:
+            break
+    dt = time.time() - t0
+    print(f"{args.requests} requests, {emitted_total} tokens in "
+          f"{ticks} engine ticks / {dt:.1f}s "
+          f"({emitted_total/max(dt,1e-9):.1f} tok/s on this host)")
+
+
+if __name__ == "__main__":
+    main()

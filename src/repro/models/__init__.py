@@ -1,0 +1,3 @@
+from repro.models.common import ArchConfig
+from repro.models import api
+__all__ = ["ArchConfig", "api"]

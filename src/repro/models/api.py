@@ -1,0 +1,329 @@
+"""Unified per-architecture API: init / loss / steps / input specs /
+sharding specs.  Everything launch/dryrun.py needs to lower any
+(arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig, Params
+from repro.models import transformer, moe, hybrid, xlstm, encdec
+from repro.training.optimizer import AdamW, AdamState
+
+if False:  # typing only — avoid circular import with repro.configs
+    from repro.configs import ShapeSpec
+
+FAMILY = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "hybrid": hybrid,
+    "ssm": xlstm,
+    "encdec": encdec,
+}
+
+
+def module_for(cfg: ArchConfig):
+    return FAMILY[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+
+    if cfg.family == "encdec":
+        dec = max(s // cfg.dec_ratio, 16)
+        if shape.kind == "train":
+            return {
+                "frame_embeds": sds((b, s, cfg.d_model), bf16),
+                "tokens": sds((b, dec), i32),
+                "labels": sds((b, dec), i32),
+            }
+        if shape.kind == "prefill":
+            return {"frame_embeds": sds((b, s, cfg.d_model), bf16)}
+        return {"token": sds((b,), i32)}   # decode
+
+    if cfg.family == "vlm":
+        if shape.kind == "train":
+            text = s - cfg.n_patches
+            return {
+                "tokens": sds((b, text), i32),
+                "labels": sds((b, text), i32),
+                "patch_embeds": sds((b, cfg.n_patches, cfg.d_model), bf16),
+            }
+        if shape.kind == "prefill":
+            text = s - cfg.n_patches
+            return {
+                "tokens": sds((b, text), i32),
+                "patch_embeds": sds((b, cfg.n_patches, cfg.d_model), bf16),
+            }
+        return {"token": sds((b,), i32)}
+
+    if shape.kind == "train":
+        return {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+    if shape.kind == "prefill":
+        return {"tokens": sds((b, s), i32)}
+    return {"token": sds((b,), i32)}       # decode: one new token
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeSpec, key) -> Dict[str, jax.Array]:
+    """Random concrete batch matching input_specs (smoke tests / examples)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, sd in specs.items():
+        key, sub = jax.random.split(key)
+        if sd.dtype == jnp.int32:
+            out[name] = jax.random.randint(sub, sd.shape, 0, cfg.vocab, jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, sd.shape, jnp.float32).astype(sd.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+# (second-to-last dim, last dim) logical sharding by leaf name; leading
+# (layer-stack) dims are always unsharded.
+_RULES: Dict[str, Tuple[Optional[str], Optional[str]]] = {
+    # in-projections: (d_in -> fsdp, d_out -> tensor)
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+    "in_proj": ("fsdp", "tp"), "w_if": ("fsdp", None), "w_in": ("fsdp", "tp"),
+    # out-projections: (d_in -> tensor, d_out -> fsdp)
+    "wo": ("tp", "fsdp"), "w_down": ("tp", "fsdp"), "out_proj": ("tp", "fsdp"),
+    # embeddings
+    "embed": ("tp", "fsdp"),      # (vocab, d)
+    "unembed": ("fsdp", "tp"),    # (d, vocab)
+    # moe router
+    "router": ("fsdp", None),
+    # mamba conv (K, channels)
+    "conv_w": (None, "tp"),
+    # xlstm block-diagonal recurrence (h, hd, 4hd) — small, replicate
+    "r": (None, None),
+}
+
+# MoE expert weights: (..., E, d_in, d_out) — expert dim gets "ep"
+_MOE_EXPERT_LEAVES = {"w_gate", "w_up", "w_down"}
+
+
+def param_pspecs(cfg: ArchConfig, params: Params, rules: Dict[str, Any],
+                 mesh: Optional[jax.sharding.Mesh] = None) -> Params:
+    """Build a PartitionSpec pytree for params.
+
+    ``rules`` maps logical axes {"fsdp", "tp", "ep"} to mesh axis names (or
+    None).  e.g. {"fsdp": "data", "tp": "model", "ep": "model"}.
+    When ``mesh`` is given, any proposed axis whose size does not divide the
+    corresponding array dimension is dropped (replicated) — e.g. seamless's
+    256206 vocab is not 16-divisible, so its embedding replicates over
+    "model" instead of erroring.
+    """
+    def guard(axis, dim_size):
+        if axis is None or mesh is None:
+            return axis
+        n = mesh.shape.get(axis) if not isinstance(axis, tuple) else None
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= mesh.shape.get(a, 1)
+        if n and dim_size % n == 0:
+            return axis
+        return None
+
+    def leaf_spec(path, leaf):
+        name = None
+        moe_ctx = False
+        for p in path:
+            k = getattr(p, "key", None)
+            if k == "moe":
+                moe_ctx = True
+            if k is not None:
+                name = k
+        if leaf.ndim <= 1 or name not in _RULES:
+            return P()
+        a, b = _RULES[name]
+        spec = [rules.get(a), rules.get(b)]
+        lead = [None] * (leaf.ndim - 2)
+        if moe_ctx and name in _MOE_EXPERT_LEAVES and leaf.ndim >= 3:
+            # (..., E, d_in, d_out): expert axis takes "ep"
+            lead[-1] = rules.get("ep")
+            # avoid duplicate mesh axis use within one spec
+            spec = [s if s != rules.get("ep") else None for s in spec]
+        full = lead + spec
+        full = [guard(ax, leaf.shape[i]) for i, ax in enumerate(full)]
+        return P(*full)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def batch_axes_for(global_batch: int, mesh: jax.sharding.Mesh,
+                   candidates: Tuple[str, ...]) -> Tuple[str, ...]:
+    """Largest prefix of ``candidates`` whose product divides global_batch."""
+    axes = []
+    prod = 1
+    for a in candidates:
+        if a not in mesh.shape:
+            continue
+        if global_batch % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return tuple(axes)
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeSpec, mesh, seq_axis: Optional[str] = None):
+    """PartitionSpecs for the input batch dict."""
+    dp = batch_axes_for(shape.global_batch,
+                        mesh, ("pod", "data"))
+    bspec = dp if dp else None
+    specs = {}
+    for name, sd in input_specs(cfg, shape).items():
+        if sd.ndim == 1:
+            specs[name] = P(bspec)
+        elif sd.ndim == 2:
+            specs[name] = P(bspec, seq_axis)
+        else:
+            specs[name] = P(bspec, seq_axis, None)
+    return specs
+
+
+def cache_pspecs(cfg: ArchConfig, shape: ShapeSpec, mesh, cache: Params) -> Params:
+    """KV cache / recurrent-state specs: batch over DP axes; KV seq axis over
+    'model' (flash-decode style length parallelism); mamba/xlstm states over
+    heads where divisible."""
+    dp = batch_axes_for(shape.global_batch, mesh, ("pod", "data"))
+    bspec = dp if dp else None
+    model = "model" if "model" in mesh.shape else None
+
+    def guard(axes, dim_size):
+        if axes is None:
+            return None
+        t = axes if isinstance(axes, tuple) else (axes,)
+        n = 1
+        for a in t:
+            n *= mesh.shape.get(a, 1)
+        return axes if n and dim_size % n == 0 else None
+
+    def spec(path, leaf):
+        name = None
+        for p in path:
+            k = getattr(p, "key", None)
+            if k is not None:
+                name = k
+        if name in ("k", "v", "ck", "cv") and leaf.ndim == 5:
+            # (L, B, S, Hkv, hd)
+            prop = [None, bspec, model, None, None]
+        elif name == "ssm" and leaf.ndim >= 4:
+            # (..., B, H, hd, N)
+            prop = [None] * (leaf.ndim - 4) + [bspec, model, None, None]
+        elif name == "conv" and leaf.ndim >= 3:
+            prop = [None] * (leaf.ndim - 3) + [bspec, None, model]
+        elif name == "C" and leaf.ndim == 4:   # mlstm (B,H,hd,hd)
+            prop = [bspec, model, None, None]
+        elif leaf.ndim >= 2:
+            prop = [None] * (leaf.ndim - 2) + [bspec, None]
+        else:
+            return P()
+        prop = [guard(ax, leaf.shape[i]) for i, ax in enumerate(prop)]
+        return P(*prop)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: ArchConfig, remat: bool = True) -> Callable:
+    mod = module_for(cfg)
+    if cfg.family == "encdec":
+        return functools.partial(mod.seq2seq_loss, cfg=cfg, remat=remat)
+    return functools.partial(mod.lm_loss, cfg=cfg, remat=remat)
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamW, remat: bool = True,
+                    microbatches: int = 1) -> Callable:
+    """One optimizer step.  ``microbatches`` > 1 accumulates gradients over
+    sequential microbatches (activation memory / M, gradient buffer is one
+    param-sized fp32 pytree sharded like the params)."""
+    loss_fn = make_loss_fn(cfg, remat)
+
+    def train_step(params, opt_state: AdamState, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / microbatches,
+                    g_acc, g)
+                return (loss_acc + l / microbatches, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_body, (jnp.float32(0), g0), micro)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    mod = module_for(cfg)
+
+    def prefill_step(params, batch):
+        if cfg.family == "encdec":
+            memory = mod.encode(params, batch["frame_embeds"], cfg, remat=False)
+            return memory
+        logits = mod.forward(params, batch["tokens"], cfg, remat=False,
+                             extra_embeds=batch.get("patch_embeds"))
+        return logits[:, -1, :]  # next-token logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    mod = module_for(cfg)
+
+    def decode_step(params, cache, token, pos):
+        return mod.decode_step(params, cache, token, pos, cfg)
+
+    return decode_step
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> Params:
+    return module_for(cfg).init_params(key, cfg, dtype)
+
+
+def init_decode_cache(cfg: ArchConfig, shape: ShapeSpec, dtype=jnp.bfloat16,
+                      as_specs: bool = False):
+    """Decode-state pytree for a shape cell; ``as_specs`` returns
+    ShapeDtypeStructs via eval_shape (no allocation — dry-run path)."""
+    mod = module_for(cfg)
+    b, s = shape.global_batch, shape.seq_len
+
+    def build():
+        if cfg.family == "ssm":
+            return mod.init_state(cfg, b)
+        if cfg.family == "encdec":
+            return mod.init_cache(cfg, b, max_dec=max(s // cfg.dec_ratio, 16),
+                                  enc_len=s, dtype=dtype)
+        return mod.init_cache(cfg, b, s, dtype=dtype)
+
+    if as_specs:
+        return jax.eval_shape(build)
+    return build()

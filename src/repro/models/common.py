@@ -1,0 +1,376 @@
+"""Shared building blocks for the architecture zoo.
+
+Functional style: params are nested dicts of jnp arrays; every layer type
+has ``init_*`` and an apply function.  Per-layer weights are *stacked along
+a leading L axis* and consumed with ``jax.lax.scan`` so the HLO contains a
+single compiled layer body regardless of depth (compile time and HLO size
+stay bounded at 94 layers x 512 devices; the roofline harness scales
+while-body costs by the trip count).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None      # defaults to d_model // n_heads
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    attn_every: int = 0          # hybrid: shared attn block period
+    # enc-dec
+    n_enc_layers: int = 0        # encdec family: encoder depth (n_layers = decoder)
+    dec_ratio: int = 8           # encdec: dec_len = seq // dec_ratio
+    # frontend stub
+    frontend: Optional[str] = None      # None | "audio" | "vision"
+    n_patches: int = 1024        # vlm: image patch embeddings prepended
+    # misc
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    # xLSTM
+    slstm_at: Tuple[int, ...] = ()
+    # shapes that need sub-quadratic support
+    supports_long: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.hd
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype=jnp.float32, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def stack_init(key, n: int, init_fn: Callable[[jax.Array], Params]) -> Params:
+    """Initialize n copies of a layer and stack leaves along axis 0."""
+    keys = jax.random.split(key, n)
+    layers = [init_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *layers)
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint against whatever axes the ambient mesh has.
+
+    Each entry of ``axes`` is None, an axis name, or a tuple of names;
+    names absent from the current mesh are dropped, so model code can say
+    ``constrain(x, ("pod", "data"), None, "model")`` and run unchanged on a
+    single-pod mesh, a 1-device test, or outside jit.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    # inside shard_map the mesh axes are Manual — with_sharding_constraint
+    # may only reference Auto axes
+    names = {n for n, t in zip(mesh.axis_names, mesh.axis_types)
+             if "Auto" in str(t)}
+    if not names:
+        return x
+
+    def keep(a):
+        if a is None:
+            return None
+        if isinstance(a, str):
+            return a if a in names else None
+        t = tuple(n for n in a if n in names)
+        return t if t else None
+
+    return jax.lax.with_sharding_constraint(x, P(*[keep(a) for a in axes]))
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dtype)
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                         # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + RoPE), full-sequence and single-token-decode forms
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.q_dim), dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.kv_dim), dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.kv_dim), dtype),
+        "wo": dense_init(ks[3], (cfg.q_dim, cfg.d_model), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, cfg: ArchConfig):
+    q = x @ p["wq"] + (p["bq"] if "bq" in p else 0)
+    k = x @ p["wk"] + (p["bk"] if "bk" in p else 0)
+    v = x @ p["wv"] + (p["bv"] if "bv" in p else 0)
+    B, S = x.shape[0], x.shape[1]
+    q = q.reshape(B, S, cfg.n_heads, cfg.hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    q = constrain(q, ("pod", "data"), None, "model", None)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """(B,T,Hkv,hd) -> (B,T,H,hd): duplicate KV heads across their query
+    group.  Keeps the head axis a *single* dim so tensor-parallel sharding
+    over heads propagates through the attention einsums (splitting H into
+    (kv, group) dims made GSPMD replicate the S^2 compute over the model
+    axis — a measured 16x redundancy, see EXPERIMENTS.md §Perf iter 1)."""
+    groups = cfg.n_heads // cfg.n_kv_heads
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _gqa_scores(q, k, cfg: ArchConfig):
+    """q: (B,S,H,hd) k: (B,T,Hkv,hd) -> scores (B,H,S,T)."""
+    B, S, H, hd = q.shape
+    kf = _expand_kv(k, cfg)
+    scores = jnp.einsum("bshd,bthd->bhst", q, kf) / jnp.sqrt(hd).astype(q.dtype)
+    return constrain(scores, ("pod", "data"), "model", None, None)
+
+
+# live-score budget above which attention switches to the q-chunked path
+_ATTN_CHUNK_THRESHOLD = 2048 * 2048
+_Q_CHUNK = 512
+
+# Pallas flash-attention kernel (kernels/flash_attention.py): the TPU
+# runtime path (launch/train.py --flash).  Off for CPU dry-runs — interpret
+# mode's HLO isn't representative and non-interpret doesn't lower on CPU.
+USE_FLASH_KERNEL = False
+FLASH_INTERPRET = False  # tests set both True to exercise the kernel path
+
+
+def use_flash_kernel(on: bool = True, interpret: bool = False) -> None:
+    global USE_FLASH_KERNEL, FLASH_INTERPRET
+    USE_FLASH_KERNEL = on
+    FLASH_INTERPRET = interpret
+
+
+def _flash_path(q, k, v, cfg: "ArchConfig", causal: bool) -> jax.Array:
+    from repro.kernels.flash_attention import flash_attention
+    groups = cfg.n_heads // cfg.n_kv_heads
+    out = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, groups=groups,
+        interpret=FLASH_INTERPRET)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _attend(q, k, v, cfg: ArchConfig, causal: bool, q_offset) -> jax.Array:
+    """q: (B,Sq,H,hd); k,v: (B,T,Hkv,hd) -> (B,Sq,H,hd).  q_offset is the
+    absolute position of q[0] for causal masking."""
+    scores = _gqa_scores(q, k, cfg)          # (B,H,Sq,T)
+    sq, t = scores.shape[-2], scores.shape[-1]
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        mask = qpos[:, None] >= jnp.arange(t)[None, :]
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    vf = _expand_kv(v, cfg)
+    return jnp.einsum("bhst,bthd->bshd", probs, vf)
+
+
+def attention(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    causal: bool = True,
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn memory
+) -> jax.Array:
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if kv is not None:
+        k, v = kv
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    T = k.shape[1]
+    if USE_FLASH_KERNEL:
+        out = _flash_path(q, k, v, cfg, causal and kv is None).reshape(B, S, cfg.q_dim)
+        return out @ p["wo"]
+    if S * T > _ATTN_CHUNK_THRESHOLD and S % _Q_CHUNK == 0:
+        # q-chunked attention: scan over query blocks bounds live scores to
+        # (B, H, qc, T) — the memory fix that makes prefill_32k fit.
+        nqc = S // _Q_CHUNK
+        qs = jnp.moveaxis(q.reshape(B, nqc, _Q_CHUNK, cfg.n_heads, cfg.hd), 1, 0)
+
+        @jax.checkpoint  # recompute probs in backward — never store (S, T)
+        def body(_, inp):
+            qc, idx = inp
+            out = _attend(qc, k, v, cfg, causal, idx * _Q_CHUNK)
+            return None, out
+
+        _, outs = jax.lax.scan(body, None, (qs, jnp.arange(nqc)))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, cfg.q_dim)
+    else:
+        out = _attend(q, k, v, cfg, causal, 0).reshape(B, S, cfg.q_dim)
+    return out @ p["wo"]
+
+
+def attention_decode(
+    p: Params,
+    x: jax.Array,                    # (B, 1, d)
+    cfg: ArchConfig,
+    cache_k: jax.Array,              # (B, T, Hkv, hd)
+    cache_v: jax.Array,
+    pos: jax.Array,                  # scalar current position
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B = x.shape[0]
+    q, k, v = _qkv(p, x, cfg)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    scores = _gqa_scores(q, cache_k.astype(x.dtype), cfg)    # (B,H,1,T)
+    T = cache_k.shape[1]
+    valid = jnp.arange(T) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    vf = _expand_kv(cache_v.astype(x.dtype), cfg)
+    out = jnp.einsum("bhst,bthd->bshd", probs, vf)
+    out = out.reshape(B, 1, cfg.q_dim) @ p["wo"]
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN block
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (cfg.d_model, cfg.d_ff), dtype),
+        "w_up": dense_init(ks[1], (cfg.d_model, cfg.d_ff), dtype),
+        "w_down": dense_init(ks[2], (cfg.d_ff, cfg.d_model), dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Chunked vocab loss
+# ---------------------------------------------------------------------------
+
+def chunked_lm_loss(
+    hidden: jax.Array,        # (B, S, d) final (normed) hidden states
+    unembed: jax.Array,       # (d, V)
+    labels: jax.Array,        # (B, S) — next-token targets, standard shift
+    n_chunks: int = 8,
+    compute_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    The unembed matmul + logsumexp + label gather run per sequence-chunk
+    under a scan, bounding live logits to (B, S/n_chunks, V) — at 200k
+    vocab this is the difference between fitting and not.
+    """
+    b, s, d = hidden.shape
+    # x_t predicts labels_{t+1}: roll labels left, mask the last position
+    y = jnp.roll(labels, -1, axis=1)
+    valid = (jnp.arange(s) < s - 1).astype(jnp.float32)       # (S,)
+    while s % n_chunks:
+        n_chunks -= 1
+    c = s // n_chunks
+    xs = hidden.reshape(b, n_chunks, c, d).transpose(1, 0, 2, 3)
+    ys = y.reshape(b, n_chunks, c).transpose(1, 0, 2)
+    ms = valid.reshape(n_chunks, c)
+    w = unembed.astype(compute_dtype)
+
+    @jax.checkpoint  # recompute logits in backward — never store (B,S,V)
+    def body(acc, inp):
+        xc, yc, mc = inp                                      # (B,c,d),(B,c),(c,)
+        logits = (xc.astype(compute_dtype) @ w).astype(jnp.float32)   # (B,c,V)
+        logits = constrain(logits, ("pod", "data"), None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)               # (B,c)
+        # label logit via one-hot reduction (stays sharded over vocab,
+        # unlike take_along_axis which gathers across the sharded dim)
+        onehot = jax.nn.one_hot(yc, logits.shape[-1], dtype=logits.dtype)
+        ll = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        return acc + jnp.sum((lse - ll) * mc[None, :]), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (xs, ys, ms))
+    return total / (b * (s - 1))
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+def logical_to_mesh(spec_dict: Params, rules: Dict[str, Optional[Tuple]]) -> Params:
+    """Map logical axis names to mesh PartitionSpecs."""
+    def conv(logical):
+        return P(*[rules.get(ax) for ax in logical])
+    return jax.tree.map(conv, spec_dict, is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,172 @@
+"""Encoder-decoder transformer (seamless-m4t-large-v2 backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, S_enc, d).  The text decoder is causal with
+cross-attention to the encoder memory; dec_len = seq // cfg.dec_ratio
+(audio-to-text length compression, documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    ArchConfig, Params, attention, attention_decode, chunked_lm_loss,
+    dense_init, init_attention, init_mlp, mlp, rmsnorm, stack_init,
+)
+
+
+def init_enc_layer(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": init_attention(k1, cfg, dtype),
+        "mlp": init_mlp(k2, cfg, dtype),
+        "norm_attn": jnp.ones((cfg.d_model,), dtype),
+        "norm_mlp": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def init_dec_layer(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_attn": init_attention(k1, cfg, dtype),
+        "cross_attn": init_attention(k2, cfg, dtype),
+        "mlp": init_mlp(k3, cfg, dtype),
+        "norm_self": jnp.ones((cfg.d_model,), dtype),
+        "norm_cross": jnp.ones((cfg.d_model,), dtype),
+        "norm_mlp": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    return {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), dtype, scale=1.0),
+        "enc_layers": stack_init(ks[1], n_enc, lambda k: init_enc_layer(k, cfg, dtype)),
+        "dec_layers": stack_init(ks[2], cfg.n_layers, lambda k: init_dec_layer(k, cfg, dtype)),
+        "norm_enc": jnp.ones((cfg.d_model,), dtype),
+        "norm_dec": jnp.ones((cfg.d_model,), dtype),
+        "unembed": dense_init(ks[3], (cfg.d_model, cfg.vocab), dtype),
+    }
+
+
+def encode(params, frame_embeds: jax.Array, cfg: ArchConfig, remat=True,
+           compute_dtype=jnp.bfloat16) -> jax.Array:
+    x = frame_embeds.astype(compute_dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(h, layer_p):
+        layer_p = jax.tree.map(lambda w: w.astype(compute_dtype), layer_p)
+        a = attention(layer_p["attn"], rmsnorm(h, layer_p["norm_attn"], cfg.norm_eps),
+                      cfg, positions, causal=False)
+        h = h + a
+        return h + mlp(layer_p["mlp"], rmsnorm(h, layer_p["norm_mlp"], cfg.norm_eps)), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(x, params["norm_enc"], cfg.norm_eps)
+
+
+def _cross_kv(p: Params, memory: jax.Array, cfg: ArchConfig):
+    b, t, _ = memory.shape
+    k = (memory @ p["wk"] + (p["bk"] if "bk" in p else 0)).reshape(b, t, cfg.n_kv_heads, cfg.hd)
+    v = (memory @ p["wv"] + (p["bv"] if "bv" in p else 0)).reshape(b, t, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def decode_train(params, memory: jax.Array, tokens: jax.Array, cfg: ArchConfig,
+                 remat=True, compute_dtype=jnp.bfloat16, unembed: bool = True) -> jax.Array:
+    x = params["embed"][tokens].astype(compute_dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    mem = memory.astype(compute_dtype)
+
+    def body(h, layer_p):
+        layer_p = jax.tree.map(lambda w: w.astype(compute_dtype), layer_p)
+        a = attention(layer_p["self_attn"], rmsnorm(h, layer_p["norm_self"], cfg.norm_eps),
+                      cfg, positions, causal=True)
+        h = h + a
+        kv = _cross_kv(layer_p["cross_attn"], mem, cfg)
+        ca = attention(layer_p["cross_attn"], rmsnorm(h, layer_p["norm_cross"], cfg.norm_eps),
+                       cfg, positions, causal=False, kv=kv)
+        h = h + ca
+        return h + mlp(layer_p["mlp"], rmsnorm(h, layer_p["norm_mlp"], cfg.norm_eps)), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = rmsnorm(x, params["norm_dec"], cfg.norm_eps)
+    if not unembed:
+        return x
+    return (x @ params["unembed"].astype(compute_dtype)).astype(jnp.float32)
+
+
+def seq2seq_loss(params, batch, cfg: ArchConfig, remat=True, compute_dtype=jnp.bfloat16):
+    memory = encode(params, batch["frame_embeds"], cfg, remat, compute_dtype)
+    hidden = decode_train(params, memory, batch["tokens"], cfg, remat,
+                          compute_dtype, unembed=False)
+    return chunked_lm_loss(hidden, params["unembed"], batch["labels"],
+                           compute_dtype=compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Inference: prefill = encode; decode = cached decoder step
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_dec: int, enc_len: int,
+               dtype=jnp.bfloat16):
+    l = cfg.n_layers
+    return {
+        "k": jnp.zeros((l, batch, max_dec, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((l, batch, max_dec, cfg.n_kv_heads, cfg.hd), dtype),
+        # precomputed cross-attention K/V per layer
+        "ck": jnp.zeros((l, batch, enc_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "cv": jnp.zeros((l, batch, enc_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def prefill(params, frame_embeds, cfg: ArchConfig, max_dec: int,
+            compute_dtype=jnp.bfloat16):
+    """Encode audio + precompute cross K/V: the enc-dec 'prefill' stage."""
+    memory = encode(params, frame_embeds, cfg, remat=False, compute_dtype=compute_dtype)
+    b = memory.shape[0]
+
+    def per_layer(layer_p):
+        layer_p = jax.tree.map(lambda w: w.astype(compute_dtype), layer_p)
+        return _cross_kv(layer_p["cross_attn"], memory, cfg)
+
+    ck, cv = jax.vmap(per_layer)(params["dec_layers"])   # (L,B,T,Hkv,hd)
+    cache = init_cache(cfg, b, max_dec, memory.shape[1], dtype=compute_dtype)
+    return dict(cache, ck=ck.astype(compute_dtype), cv=cv.astype(compute_dtype)), memory
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig, compute_dtype=jnp.bfloat16):
+    x = params["embed"][token][:, None, :].astype(compute_dtype)
+
+    def body(h, scanned):
+        layer_p, ck_self, cv_self, ck_x, cv_x = scanned
+        layer_p = jax.tree.map(lambda w: w.astype(compute_dtype), layer_p)
+        hn = rmsnorm(h, layer_p["norm_self"], cfg.norm_eps)
+        a, ck_self, cv_self = attention_decode(layer_p["self_attn"], hn, cfg,
+                                               ck_self, cv_self, pos)
+        h = h + a
+        hn = rmsnorm(h, layer_p["norm_cross"], cfg.norm_eps)
+        ca = attention(layer_p["cross_attn"], hn, cfg,
+                       positions=jnp.zeros((h.shape[0], 1), jnp.int32),
+                       causal=False,
+                       kv=(ck_x.astype(h.dtype), cv_x.astype(h.dtype)))
+        h = h + ca
+        h = h + mlp(layer_p["mlp"], rmsnorm(h, layer_p["norm_mlp"], cfg.norm_eps))
+        return h, (ck_self, cv_self)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["ck"], cache["cv"])
+    )
+    x = rmsnorm(x, params["norm_dec"], cfg.norm_eps)
+    logits = (x[:, 0, :] @ params["unembed"].astype(compute_dtype)).astype(jnp.float32)
+    return logits, dict(cache, k=nk, v=nv)

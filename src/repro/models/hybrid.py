@@ -1,0 +1,146 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block applied
+periodically (every ``cfg.attn_every`` Mamba layers, same weights each time —
+Zamba2's parameter-sharing trick).
+
+Layout for scan-friendliness: the 81 Mamba layers are split into
+``n_groups = n_layers // attn_every`` groups of ``attn_every`` (stacked
+(G, E, ...), double scan) plus a stacked tail of the remainder; the shared
+attention+MLP block (single weight set) runs after each group.
+
+Simplifications vs. the released checkpoint (noted per DESIGN.md): Zamba2
+concatenates original embeddings into the shared block input and uses LoRA
+per invocation; we apply the shared block on the residual stream directly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    ArchConfig, Params, attention, attention_decode, chunked_lm_loss,
+    dense_init, init_attention, init_mlp, mlp, rmsnorm, stack_init,
+)
+from repro.models.mamba import (
+    init_mamba_block, init_mamba_state, mamba_block, mamba_decode,
+)
+
+
+def _split(cfg: ArchConfig) -> Tuple[int, int, int]:
+    g = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers - g * cfg.attn_every
+    return g, cfg.attn_every, tail
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    g, e, tail = _split(cfg)
+    ks = jax.random.split(key, 6)
+    shared = {
+        "attn": init_attention(ks[0], cfg, dtype),
+        "mlp": init_mlp(ks[1], cfg, dtype),
+        "norm_attn": jnp.ones((cfg.d_model,), dtype),
+        "norm_mlp": jnp.ones((cfg.d_model,), dtype),
+    }
+    p = {
+        "embed": dense_init(ks[2], (cfg.vocab, cfg.d_model), dtype, scale=1.0),
+        "groups": stack_init(
+            ks[3], g,
+            lambda k: stack_init(k, e, lambda k2: init_mamba_block(k2, cfg, dtype)),
+        ),
+        "shared": shared,
+        "norm_f": jnp.ones((cfg.d_model,), dtype),
+        "unembed": dense_init(ks[4], (cfg.d_model, cfg.vocab), dtype),
+    }
+    if tail:
+        p["tail"] = stack_init(ks[5], tail, lambda k: init_mamba_block(k, cfg, dtype))
+    return p
+
+
+def forward(params, tokens, cfg: ArchConfig, remat=True, compute_dtype=jnp.bfloat16,
+            extra_embeds=None, unembed: bool = True):
+    x = params["embed"][tokens].astype(compute_dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    shared = jax.tree.map(lambda w: w.astype(compute_dtype), params["shared"])
+
+    def mamba_body(h, layer_p):
+        layer_p = jax.tree.map(lambda w: w.astype(compute_dtype), layer_p)
+        return mamba_block(layer_p, h, cfg), None
+
+    if remat:  # per-layer remat inside the (also remat'd) group: without it
+        # the group backward keeps all attn_every layers' residuals live
+        mamba_body = jax.checkpoint(mamba_body)
+
+    def group_body(h, group_p):
+        h, _ = jax.lax.scan(mamba_body, h, group_p)
+        a = attention(shared["attn"], rmsnorm(h, shared["norm_attn"], cfg.norm_eps),
+                      cfg, positions)
+        h = h + a
+        h = h + mlp(shared["mlp"], rmsnorm(h, shared["norm_mlp"], cfg.norm_eps))
+        return h, None
+
+    if remat:
+        group_body = jax.checkpoint(group_body)
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+    if "tail" in params:
+        x, _ = jax.lax.scan(mamba_body, x, params["tail"])
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    if not unembed:
+        return x
+    return (x @ params["unembed"].astype(compute_dtype)).astype(jnp.float32)
+
+
+def lm_loss(params, batch, cfg: ArchConfig, remat=True, compute_dtype=jnp.bfloat16):
+    hidden = forward(params, batch["tokens"], cfg, remat=remat,
+                     compute_dtype=compute_dtype, unembed=False)
+    return chunked_lm_loss(hidden, params["unembed"], batch["labels"],
+                           compute_dtype=compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode: Mamba recurrent states + shared-attn KV cache (one per group)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    g, e, tail = _split(cfg)
+    kv = (g, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {
+        "groups": jax.vmap(lambda _: jax.vmap(
+            lambda __: init_mamba_state(cfg, batch))(jnp.arange(e)))(jnp.arange(g)),
+        "tail": (jax.vmap(lambda _: init_mamba_state(cfg, batch))(jnp.arange(tail))
+                 if tail else None),
+        "k": jnp.zeros(kv, dtype),
+        "v": jnp.zeros(kv, dtype),
+    }
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig, compute_dtype=jnp.bfloat16):
+    x = params["embed"][token][:, None, :].astype(compute_dtype)
+    shared = jax.tree.map(lambda w: w.astype(compute_dtype), params["shared"])
+
+    def mamba_step(h, scanned):
+        layer_p, st = scanned
+        layer_p = jax.tree.map(lambda w: w.astype(compute_dtype), layer_p)
+        h, st_new = mamba_decode(layer_p, h, st, cfg)
+        return h, st_new
+
+    def group_step(h, scanned):
+        group_p, st, ck, cv = scanned
+        h, st_new = jax.lax.scan(mamba_step, h, (group_p, st))
+        hn = rmsnorm(h, shared["norm_attn"], cfg.norm_eps)
+        a, ck, cv = attention_decode(shared["attn"], hn, cfg, ck, cv, pos)
+        h = h + a
+        h = h + mlp(shared["mlp"], rmsnorm(h, shared["norm_mlp"], cfg.norm_eps))
+        return h, (st_new, ck, cv)
+
+    x, (gst, nk, nv) = jax.lax.scan(
+        group_step, x, (params["groups"], cache["groups"], cache["k"], cache["v"])
+    )
+    new_cache = dict(cache, groups=gst, k=nk, v=nv)
+    if "tail" in params and cache["tail"] is not None:
+        x, tst = jax.lax.scan(mamba_step, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = tst
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    logits = (x[:, 0, :] @ params["unembed"].astype(compute_dtype)).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,174 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunkwise-parallel training
+form + constant-memory recurrent decode form.
+
+Follows the "minimal SSD" formulation of the Mamba2 paper: per head h with
+scalar decay A_h, state S in R^{headdim x d_state}:
+
+    S_t = exp(A_h dt_t) S_{t-1} + dt_t x_t B_t^T          (outer product)
+    y_t = S_t C_t + D_h x_t
+
+Training uses the chunkwise algorithm: quadratic attention-like form inside
+chunks of length Q (MXU-friendly (Q x Q) tiles) and a `lax.scan` over chunk
+states — sub-quadratic overall, which is what qualifies the hybrid/ssm archs
+for the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, Params, dense_init, rmsnorm
+
+CONV_K = 4  # depthwise causal conv width
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return 2 * cfg.d_model
+
+
+def n_ssm_heads(cfg: ArchConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def init_mamba_block(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    di, n, hp = d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg)
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z (di), x (di), B (n), C (n), dt (heads)]
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, 2 * di + 2 * n + hp), dtype),
+        "conv_w": dense_init(ks[1], (CONV_K, di + 2 * n), dtype, scale=0.5),
+        "A_log": jnp.zeros((hp,), dtype),
+        "D": jnp.ones((hp,), dtype),
+        "dt_bias": jnp.zeros((hp,), dtype),
+        "norm_in": jnp.ones((cfg.d_model,), dtype),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, cfg.d_model), dtype),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) -> (..., Q, Q) lower-tri pairwise cumulative sums:
+    out[i,j] = sum_{j < s <= i} a[s] for i >= j, -inf above diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """Chunkwise SSD.
+
+    x: (B, S, H, P)  dt: (B, S, H)  a_log: (H,) — decay = -exp(a_log)
+    b, c: (B, S, N)  (single SSM group, shared across heads)
+    Returns y: (B, S, H, P).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))             # (B,S,H)
+    adt = a * dt                                             # (B,S,H)
+    xdt = x * dt.astype(x.dtype)[..., None]
+
+    # chunked views
+    def ch(t):  # (B,S,...) -> (B,NC,Q,...)
+        return t.reshape(bsz, nc, q, *t.shape[2:])
+
+    # single scan over chunks: per-chunk intra (quadratic) + inter (carried
+    # state) computed together so only ONE chunk's (Q,Q) decay tensor is
+    # ever live — materializing all NC chunks at once made zamba2 train_4k
+    # the worst memory row in the §Roofline table (238s; EXPERIMENTS.md
+    # §Perf bonus iteration).
+    xc, adtc, bc, cc = ch(xdt), ch(adt), ch(b), ch(c)
+    xs = (jnp.moveaxis(xc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(jnp.moveaxis(adtc, -1, -2), 1, 0),    # (NC,B,H,Q)
+          jnp.moveaxis(bc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(cc, 1, 0).astype(jnp.float32))
+
+    def chunk_body(s_prev, inp):
+        xk, adt_h, bk, ck = inp        # (B,Q,H,P),(B,H,Q),(B,Q,N),(B,Q,N)
+        # intra-chunk
+        l = jnp.exp(_segsum(adt_h))                          # (B,H,Q,Q)
+        scores = jnp.einsum("bqn,bkn->bqk", ck, bk)          # (B,Q,Q)
+        y_diag = jnp.einsum("bqk,bhqk,bkhp->bqhp", scores, l, xk)
+        # inter-chunk from carried state
+        a_cum = jnp.cumsum(adt_h, axis=-1)                   # (B,H,Q)
+        state_decay = jnp.exp(a_cum)
+        y_off = jnp.einsum("bqn,bhq,bhpn->bqhp", ck, state_decay, s_prev)
+        # state update
+        decay_states = jnp.exp(a_cum[..., -1:] - a_cum)      # (B,H,Q)
+        st = jnp.einsum("bkn,bhk,bkhp->bhpn", bk, decay_states, xk)
+        s_new = s_prev * jnp.exp(a_cum[..., -1])[..., None, None] + st
+        return s_new, y_diag + y_off
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, init, xs)               # (NC,B,Q,H,P)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p).astype(x.dtype)
+    return y
+
+
+def causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B,S,D), w (K,D)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out)
+
+
+def mamba_block(p: Params, x: jax.Array, cfg: ArchConfig, chunk: int = 128) -> jax.Array:
+    """x: (B, S, d_model) -> (B, S, d_model)."""
+    di, n, h = d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg)
+    bsz, s, _ = x.shape
+    xn = rmsnorm(x, p["norm_in"], cfg.norm_eps)
+    proj = xn @ p["in_proj"]
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xbc = causal_conv(xbc, p["conv_w"])
+    xin, b, c = jnp.split(xbc, [di, di + n], axis=-1)
+    xin = xin.reshape(bsz, s, h, cfg.ssm_head_dim)
+    dt = dt + p["dt_bias"]
+    y = ssd_chunked(xin, dt, p["A_log"], b, c, chunk)
+    y = y + p["D"][None, None, :, None] * xin
+    y = y.reshape(bsz, s, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return x + y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Recurrent decode (one token, constant state)
+# ---------------------------------------------------------------------------
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    di, n, h = d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, di + 2 * n), dtype),
+    }
+
+
+def mamba_decode(p: Params, x: jax.Array, state: Dict, cfg: ArchConfig):
+    """x: (B, 1, d_model); returns (y, new_state)."""
+    di, n, h = d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg)
+    bsz = x.shape[0]
+    xn = rmsnorm(x, p["norm_in"], cfg.norm_eps)
+    proj = xn @ p["in_proj"]
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    # conv over rolling window
+    win = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)  # (B,K,D)
+    conv_out = jax.nn.silu(jnp.einsum("bkd,kd->bd", win, p["conv_w"]))[:, None, :]
+    new_conv = win[:, 1:, :].astype(state["conv"].dtype)
+    xin, b, c = jnp.split(conv_out, [di, di + n], axis=-1)
+    xin = xin.reshape(bsz, h, cfg.ssm_head_dim)
+    dt = jax.nn.softplus((dt[:, 0] + p["dt_bias"]).astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(a * dt)                                    # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", (xin * dt[..., None].astype(xin.dtype)).astype(jnp.float32), b[:, 0].astype(jnp.float32))
+    s_new = state["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", s_new, c[:, 0].astype(jnp.float32)).astype(x.dtype)
+    y = y + p["D"][None, :, None] * xin
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return (x + y @ p["out_proj"]).astype(x.dtype), {"ssm": s_new, "conv": new_conv}

@@ -1,0 +1,266 @@
+"""Mixture-of-Experts decoder (qwen3-moe, olmoe).
+
+Dispatch is scatter-based (MegaBlocks-style adapted to static TPU shapes):
+token->slot indices are computed with a grouped cumsum and tokens are
+scattered into a static (E, C, d) buffer — avoiding the O(T*E*C) one-hot
+dispatch tensor of Mesh-TF-style MoE, which does not fit at 1M tokens.
+Expert weights are stacked (E, d, d_ff) and shard over the ``model`` mesh
+axis; GSPMD lowers the scatter/gather across the expert axis to all-to-all.
+
+The expert *selection* is the paper's top-t projection in routing form: we
+reuse ``jax.lax.top_k`` (the exact small-k variant of core.topk) on router
+logits — noted in DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    ArchConfig,
+    Params,
+    attention,
+    attention_decode,
+    chunked_lm_loss,
+    constrain,
+    dense_init,
+    init_attention,
+    rmsnorm,
+    stack_init,
+)
+from repro.models import transformer as T
+
+
+def init_moe_ffn(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": dense_init(ks[0], (d, e), dtype),
+        "w_gate": dense_init(ks[1], (e, d, f), dtype),
+        "w_up": dense_init(ks[2], (e, d, f), dtype),
+        "w_down": dense_init(ks[3], (e, f, d), dtype),
+    }
+
+
+def moe_ffn(
+    p: Params,
+    x: jax.Array,              # (G, Tg, d) — G dispatch groups (sharded over data)
+    cfg: ArchConfig,
+    capacity_factor: float = 1.25,
+) -> jax.Array:
+    g, tg, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    cap = max(int(math.ceil(tg * k / e * capacity_factor)), k)
+
+    logits = jnp.einsum("gtd,de->gte", x, p["router"].astype(x.dtype))
+    gates, sel = jax.lax.top_k(logits, k)                    # (G,Tg,K)
+    gates = jax.nn.softmax(gates.astype(jnp.float32), -1).astype(x.dtype)
+
+    def dispatch_group(xg, selg, wg):
+        # xg (Tg,d), selg (Tg,K), wg (Tg,K)
+        tk = tg * k
+        e_flat = selg.reshape(tk)
+        onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)  # (TK,E)
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        my_pos = jnp.take_along_axis(pos, e_flat[:, None], 1)[:, 0]
+        keep = my_pos < cap
+        # overflowed tokens scatter in-bounds with a zero payload (keep=0),
+        # so the buffer stays exactly (E*C, d) — shardable E-major over the
+        # expert/model axis with no ragged overflow row
+        slot = e_flat * cap + jnp.where(keep, my_pos, 0)
+        x_rep = jnp.repeat(xg, k, axis=0)                    # (TK,d)
+        buf = jnp.zeros((e * cap, d), x.dtype).at[slot].add(
+            x_rep * keep[:, None].astype(x.dtype)
+        )
+        return buf.reshape(e, cap, d), slot, keep, wg.reshape(tk)
+
+    buf, slot, keep, w_flat = jax.vmap(dispatch_group)(x, sel, gates)
+    # buf: (G, E, C, d) — experts sharded over 'model' (EP); the constraint
+    # pins the layout so the expert matmuls run local to their shard instead
+    # of GSPMD all-reducing a d-sharded dispatch buffer every layer
+    # (EXPERIMENTS.md §Perf pair 2: 147s -> see log).
+    buf = constrain(buf, ("pod", "data"), "model", None, None)
+    h = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(x.dtype))
+    out = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * u, p["w_down"].astype(x.dtype))
+    out = constrain(out, ("pod", "data"), "model", None, None)
+
+    def combine_group(bufg, slotg, keepg, wg):
+        flat = bufg.reshape(e * cap, d)
+        y = flat[slotg] * (wg * keepg.astype(x.dtype))[:, None]  # (TK,d)
+        return jnp.sum(y.reshape(tg, k, d), axis=1)
+
+    y = jax.vmap(combine_group)(out, slot, keep, w_flat)
+    return constrain(y, ("pod", "data"), None, None)
+
+
+# ---------------------------------------------------------------------------
+# shard_map expert-parallel interior (explicit all_to_all dispatch)
+# ---------------------------------------------------------------------------
+
+def _moe_local(cfg: ArchConfig, e_shards: int, dp_axes, capacity_factor: float):
+    """Device-local MoE body for shard_map.  Tokens stay local to their DP
+    shard; expert weights live on the `model` shard; token->expert exchange
+    is two explicit all_to_alls of exactly the dispatched payload —
+    replacing the GSPMD masked-all-reduce combine (16x the minimal bytes,
+    EXPERIMENTS.md §Perf pair 2 iter 2)."""
+    e, k = cfg.n_experts, cfg.moe_top_k
+    e_loc = e // e_shards
+
+    def body(router, w_gate, w_up, w_down, x3d):
+        # x3d: (B_loc, S_loc, d) local tokens (flattened locally — a global
+        # (B*S) reshape across two sharded dims made GSPMD fall back to
+        # full rematerialization, §Perf pair 2 iter 3); router replicated;
+        # w_*: (E_loc, d, f) local expert slabs (d already full: the FSDP
+        # all-gather happened outside via GSPMD before entering shard_map).
+        bl, sl, d = x3d.shape
+        x = x3d.reshape(bl * sl, d)
+        tl = bl * sl
+        cap = max(int(math.ceil(tl * k / e * capacity_factor)), 4)
+        logits = x @ router.astype(x.dtype)
+        gates, sel = jax.lax.top_k(logits, k)                  # (Tl,K)
+        gates = jax.nn.softmax(gates.astype(jnp.float32), -1).astype(x.dtype)
+        tk = tl * k
+        e_flat = sel.reshape(tk)
+        onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        my_pos = jnp.take_along_axis(pos, e_flat[:, None], 1)[:, 0]
+        keep = my_pos < cap
+        slot = e_flat * cap + jnp.where(keep, my_pos, 0)
+        x_rep = jnp.repeat(x, k, axis=0)
+        buf = jnp.zeros((e * cap, d), x.dtype).at[slot].add(
+            x_rep * keep[:, None].astype(x.dtype))
+        # exchange: (E_shards, E_loc*cap, d) -> gather my experts from all
+        # source shards
+        buf = buf.reshape(e_shards, e_loc * cap, d)
+        recv = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=0,
+                                  tiled=True)                 # (E_shards*E_loc*cap, d)
+        recv = recv.reshape(e_shards, e_loc, cap, d).transpose(1, 0, 2, 3)
+        recv = recv.reshape(e_loc, e_shards * cap, d)
+        h = jnp.einsum("ecd,edf->ecf", recv, w_gate.astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", recv, w_up.astype(x.dtype))
+        out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                         w_down.astype(x.dtype))               # (E_loc, S*cap, d)
+        out = out.reshape(e_loc, e_shards, cap, d).transpose(1, 0, 2, 3)
+        out = out.reshape(e_shards, e_loc * cap, d)
+        back = jax.lax.all_to_all(out, "model", split_axis=0, concat_axis=0,
+                                  tiled=True).reshape(e * cap, d)
+        y = back[slot] * (gates.reshape(tk) * keep.astype(x.dtype))[:, None]
+        return jnp.sum(y.reshape(tl, k, d), axis=1).reshape(bl, sl, d)
+
+    return body
+
+
+def moe_ffn_ep(p: Params, x3d: jax.Array, cfg: ArchConfig,
+               capacity_factor: float = 1.25) -> jax.Array:
+    """Expert-parallel MoE over the ambient mesh via shard_map.
+    ``x3d``: (B, S, d) — batch sharded over pod/data, sequence over model
+    (every device dispatches a distinct token slice; the all_to_all within
+    each dp row regroups tokens by expert).  Falls back to the GSPMD path
+    when no suitable mesh/divisibility is present."""
+    mesh = jax.sharding.get_abstract_mesh()
+    b, s_len, d = x3d.shape
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names \
+            or cfg.n_experts % mesh.shape["model"] or mesh.shape["model"] == 1:
+        return moe_ffn(p, x3d.reshape(1, b * s_len, d), cfg,
+                       capacity_factor)[0].reshape(b, s_len, d)
+    e_shards = mesh.shape["model"]
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_div = 1
+    for a in dp_axes:
+        dp_div *= mesh.shape[a]
+    if b % dp_div or s_len % e_shards:
+        return moe_ffn(p, x3d.reshape(1, b * s_len, d), cfg,
+                       capacity_factor)[0].reshape(b, s_len, d)
+    from jax.sharding import PartitionSpec as P
+    body = _moe_local(cfg, e_shards, dp_axes, capacity_factor)
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P("model", None, None), P("model", None, None),
+                  P("model", None, None), P(dp_axes, "model", None)),
+        out_specs=P(dp_axes, "model", None),
+        check_vma=False,
+    )
+    return fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x3d)
+
+
+def init_layer(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": init_attention(k1, cfg, dtype),
+        "moe": init_moe_ffn(k2, cfg, dtype),
+        "norm_attn": jnp.ones((cfg.d_model,), dtype),
+        "norm_mlp": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ke, kl, ko = jax.random.split(key, 3)
+    return {
+        "embed": dense_init(ke, (cfg.vocab, cfg.d_model), dtype, scale=1.0),
+        "layers": stack_init(kl, cfg.n_layers, lambda k: init_layer(k, cfg, dtype)),
+        "norm_f": jnp.ones((cfg.d_model,), dtype),
+        "unembed": dense_init(ko, (cfg.d_model, cfg.vocab), dtype),
+    }
+
+
+def forward(params, tokens, cfg: ArchConfig, remat=True, n_groups: Optional[int] = None,
+            compute_dtype=jnp.bfloat16, extra_embeds=None, unembed: bool = True):
+    x = params["embed"][tokens].astype(compute_dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(compute_dtype), x], axis=1)
+    b, s, d = x.shape
+    g = n_groups or b
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(h, layer_p):
+        layer_p = jax.tree.map(lambda w: w.astype(compute_dtype), layer_p)
+        a = attention(layer_p["attn"], rmsnorm(h, layer_p["norm_attn"], cfg.norm_eps), cfg, positions)
+        h = h + a
+        hn = rmsnorm(h, layer_p["norm_mlp"], cfg.norm_eps)
+        ffn = moe_ffn_ep(layer_p["moe"], hn, cfg)
+        return h + ffn, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    if not unembed:
+        return x
+    return (x @ params["unembed"].astype(compute_dtype)).astype(jnp.float32)
+
+
+def lm_loss(params, batch, cfg: ArchConfig, remat=True, compute_dtype=jnp.bfloat16):
+    hidden = forward(params, batch["tokens"], cfg, remat=remat,
+                     compute_dtype=compute_dtype, unembed=False)
+    return chunked_lm_loss(hidden, params["unembed"], batch["labels"],
+                           compute_dtype=compute_dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig, compute_dtype=jnp.bfloat16):
+    x = params["embed"][token][:, None, :].astype(compute_dtype)
+    b = x.shape[0]
+
+    def body(h, scanned):
+        layer_p, ck, cv = scanned
+        layer_p = jax.tree.map(lambda w: w.astype(compute_dtype), layer_p)
+        hn = rmsnorm(h, layer_p["norm_attn"], cfg.norm_eps)
+        a, ck, cv = attention_decode(layer_p["attn"], hn, cfg, ck, cv, pos)
+        h = h + a
+        hn = rmsnorm(h, layer_p["norm_mlp"], cfg.norm_eps)
+        ffn = moe_ffn_ep(layer_p["moe"], hn, cfg)
+        return h + ffn, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    logits = (x[:, 0, :] @ params["unembed"].astype(compute_dtype)).astype(jnp.float32)
+    return logits, {"k": nk, "v": nv}

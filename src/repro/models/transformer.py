@@ -1,0 +1,137 @@
+"""Decoder-only dense transformer (llama/qwen/phi/deepseek/internvl2-LM).
+
+Layers are scan-stacked; activations optionally rematerialized
+(``jax.checkpoint``) per layer — the standard memory/compute trade at 4k
+sequence and 256 global batch.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    ArchConfig,
+    Params,
+    attention,
+    attention_decode,
+    chunked_lm_loss,
+    dense_init,
+    init_attention,
+    init_mlp,
+    mlp,
+    rmsnorm,
+    stack_init,
+)
+
+
+def init_layer(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": init_attention(k1, cfg, dtype),
+        "mlp": init_mlp(k2, cfg, dtype),
+        "norm_attn": jnp.ones((cfg.d_model,), dtype),
+        "norm_mlp": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ke, kl, ko = jax.random.split(key, 3)
+    p = {
+        "embed": dense_init(ke, (cfg.vocab, cfg.d_model), dtype, scale=1.0),
+        "layers": stack_init(kl, cfg.n_layers, lambda k: init_layer(k, cfg, dtype)),
+        "norm_f": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ko, (cfg.d_model, cfg.vocab), dtype)
+    return p
+
+
+def layer_fwd(p: Params, x: jax.Array, cfg: ArchConfig, positions: jax.Array) -> jax.Array:
+    h = x + attention(p["attn"], rmsnorm(x, p["norm_attn"], cfg.norm_eps), cfg, positions)
+    return h + mlp(p["mlp"], rmsnorm(h, p["norm_mlp"], cfg.norm_eps))
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,                   # (B, S) int32
+    cfg: ArchConfig,
+    remat: bool = True,
+    extra_embeds: Optional[jax.Array] = None,   # (B, P, d) e.g. vlm patches
+    compute_dtype=jnp.bfloat16,
+    unembed: bool = True,
+) -> jax.Array:
+    """Returns logits (B, S_total, vocab), or final hidden if not unembed."""
+    x = params["embed"][tokens].astype(compute_dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(compute_dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, layer_p):
+        layer_p = jax.tree.map(lambda w: w.astype(compute_dtype), layer_p)
+        return layer_fwd(layer_p, h, cfg, positions), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    if not unembed:
+        return x
+    w = unembed_matrix(params, cfg)
+    return (x @ w.astype(compute_dtype)).astype(jnp.float32)
+
+
+def unembed_matrix(params: Params, cfg: ArchConfig) -> jax.Array:
+    w = params.get("unembed", None)
+    if w is None:  # tied embeddings: scale to keep logits O(1)
+        w = params["embed"].T * (cfg.d_model ** -0.5)
+    return w
+
+
+def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig,
+            remat: bool = True, compute_dtype=jnp.bfloat16) -> jax.Array:
+    hidden = forward(params, batch["tokens"], cfg, remat=remat,
+                     extra_embeds=batch.get("patch_embeds"),
+                     compute_dtype=compute_dtype, unembed=False)
+    # score the token segment only (vlm: drop patch positions)
+    n_prefix = hidden.shape[1] - batch["tokens"].shape[1]
+    hidden = hidden[:, n_prefix:, :]
+    return chunked_lm_loss(hidden, unembed_matrix(params, cfg), batch["labels"],
+                           compute_dtype=compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Params:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(
+    params: Params,
+    cache: Params,
+    token: jax.Array,        # (B,) int32 current token
+    pos: jax.Array,          # scalar int32 position
+    cfg: ArchConfig,
+    compute_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Params]:
+    """One token of autoregressive decode with a static KV cache."""
+    x = params["embed"][token][:, None, :].astype(compute_dtype)   # (B,1,d)
+
+    def body(h, scanned):
+        layer_p, ck, cv = scanned
+        layer_p = jax.tree.map(lambda w: w.astype(compute_dtype), layer_p)
+        hn = rmsnorm(h, layer_p["norm_attn"], cfg.norm_eps)
+        a, ck, cv = attention_decode(layer_p["attn"], hn, cfg, ck, cv, pos)
+        h = h + a
+        h = h + mlp(layer_p["mlp"], rmsnorm(h, layer_p["norm_mlp"], cfg.norm_eps))
+        return h, (ck, cv)
+
+    x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    logits = (x[:, 0, :] @ unembed_matrix(params, cfg).astype(compute_dtype)).astype(jnp.float32)
+    return logits, {"k": new_k, "v": new_v}

@@ -1,0 +1,297 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with true hidden-to-hidden recurrence).
+
+mLSTM training uses the stabilized parallel (quadratic-in-chunk) form of the
+xLSTM paper; decode uses the O(1)-state recurrent form (matrix memory
+C in R^{hd x hd}) — which is what qualifies xlstm for ``long_500k``.
+sLSTM is inherently sequential (recurrent R h_{t-1} term) and runs as a
+``lax.scan`` over time with block-diagonal per-head recurrence.
+
+The 125M config is 12 unrolled layers (no scan stacking — heterogeneous
+block types; HLO stays small at this scale).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, Params, chunked_lm_loss, dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h  # mLSTM operates at model width, per-head slice
+    up = 2 * d   # projection factor 2 as in xLSTM
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_up": dense_init(ks[0], (d, 2 * up), dtype),     # -> [x_in, gate]
+        "wq": dense_init(ks[1], (up, up), dtype),
+        "wk": dense_init(ks[2], (up, up), dtype),
+        "wv": dense_init(ks[3], (up, up), dtype),
+        "w_if": dense_init(ks[4], (up, 2 * h), dtype, scale=0.01),  # i,f gate logits per head
+        "b_i": jnp.zeros((h,), dtype),
+        "b_f": jnp.full((h,), 3.0, dtype),                 # forget bias ~ remember
+        "out_norm": jnp.ones((up,), dtype),
+        "w_down": dense_init(ks[5], (up, d), dtype),
+    }
+
+
+MLSTM_CHUNK = 256
+
+
+def mlstm_parallel(p: Params, x: jax.Array, cfg: ArchConfig,
+                   chunk: int = MLSTM_CHUNK) -> jax.Array:
+    """Stabilized *chunkwise* parallel form: quadratic only within chunks of
+    Q, matrix-memory recurrence across chunks (same trick as Mamba2's SSD).
+
+    Replaces the full-sequence quadratic form whose (B,S,S,H) decay matrix
+    made prefill_32k memory-bound at 570s (EXPERIMENTS.md $Perf pair 1):
+    live memory drops S^2 -> S*Q and FLOPs drop ~S/Q for the decay part.
+    """
+    d, h = cfg.d_model, cfg.n_heads
+    up = 2 * d
+    hd = up // h
+    b, s, _ = x.shape
+    q = min(chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xi, gate = jnp.split(xn @ p["w_up"], 2, axis=-1)       # (B,S,up) each
+
+    def heads(t, w):
+        return (t @ w).reshape(b, s, h, hd).astype(jnp.float32)
+
+    qh, kh, vh = heads(xi, p["wq"]), heads(xi, p["wk"]), heads(xi, p["wv"])
+    kh = kh / jnp.sqrt(hd)
+    if_logits = xi @ p["w_if"]                              # (B,S,2H)
+    i_log = (if_logits[..., :h] + p["b_i"]).astype(jnp.float32)    # (B,S,H)
+    f_log = jax.nn.log_sigmoid((if_logits[..., h:] + p["b_f"]).astype(jnp.float32))
+
+    def ch(t):  # (B,S,...) -> (NC,B,Q,...)
+        return jnp.moveaxis(t.reshape(b, nc, q, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc, ic, fc = ch(qh), ch(kh), ch(vh), ch(i_log), ch(f_log)
+
+    def chunk_step(carry, inp):
+        c_state, n_state, m_state = carry         # (B,H,hd,hd),(B,H,hd),(B,H)
+        qk, kk, vk, ik, fk = inp                  # (B,Q,H,*) / (B,Q,H)
+        fcum = jnp.cumsum(fk, axis=1)             # (B,Q,H) inclusive
+        # intra-chunk log decay D[t,j] = fcum[t]-fcum[j]+i[j], j<=t
+        dmat = fcum[:, :, None, :] - fcum[:, None, :, :] + ik[:, None, :, :]
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+        # carry-in log weight per position: fcum[t] + m_prev
+        carry_log = fcum + m_state[:, None, :]    # (B,Q,H)
+        m_t = jnp.maximum(jnp.max(dmat, axis=2), carry_log)   # (B,Q,H)
+        dexp = jnp.exp(dmat - m_t[:, :, None, :])             # (B,Q,Q,H)
+        cw = jnp.exp(carry_log - m_t)                         # (B,Q,H)
+
+        scores = jnp.einsum("bthd,bjhd->btjh", qk, kk) * dexp
+        y_intra = jnp.einsum("btjh,bjhd->bthd", scores, vk)
+        # C layout is [v-dim, k-dim]; q contracts with the k index
+        y_carry = jnp.einsum("bthe,bhde->bthd", qk, c_state) * cw[..., None]
+        n_carry = jnp.einsum("bthd,bhd->bth", qk, n_state) * cw
+        denom_raw = jnp.einsum("btjh->bth", scores) + n_carry
+        denom = jnp.maximum(jnp.abs(denom_raw), jnp.exp(-m_t))
+        y = (y_intra + y_carry) / denom[..., None]            # (B,Q,H,hd)
+
+        # chunk-state update (carry out of this chunk)
+        f_total = fcum[:, -1, :]                              # (B,H)
+        out_log = f_total[:, None, :] - fcum + ik             # (B,Q,H)
+        m_new = jnp.maximum(m_state + f_total, jnp.max(out_log, axis=1))
+        w_out = jnp.exp(out_log - m_new[:, None, :])          # (B,Q,H)
+        c_new = (c_state * jnp.exp(m_state + f_total - m_new)[..., None, None]
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", w_out, vk, kk))
+        n_new = (n_state * jnp.exp(m_state + f_total - m_new)[..., None]
+                 + jnp.einsum("bjh,bjhd->bhd", w_out, kk))
+        return (c_new, n_new, m_new), y
+
+    init = (jnp.zeros((b, h, hd, hd), jnp.float32),
+            jnp.zeros((b, h, hd), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+    _, ys = jax.lax.scan(chunk_step, init, (qc, kc, vc, ic, fc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, up).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(gate)
+    return x + y @ p["w_down"]
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> Dict[str, jax.Array]:
+    h = cfg.n_heads
+    hd = 2 * cfg.d_model // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p: Params, x: jax.Array, state: Dict, cfg: ArchConfig):
+    """One-token recurrent step.  x: (B, 1, d)."""
+    d, h = cfg.d_model, cfg.n_heads
+    up = 2 * d
+    hd = up // h
+    b = x.shape[0]
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xi, gate = jnp.split(xn @ p["w_up"], 2, axis=-1)
+    xi1 = xi[:, 0]
+    q = (xi1 @ p["wq"]).reshape(b, h, hd).astype(jnp.float32)
+    k = (xi1 @ p["wk"]).reshape(b, h, hd).astype(jnp.float32)
+    v = (xi1 @ p["wv"]).reshape(b, h, hd).astype(jnp.float32)
+    if_logits = xi1 @ p["w_if"]
+    i_log = (if_logits[..., :h] + p["b_i"]).astype(jnp.float32)     # (B,H)
+    f_log = jax.nn.log_sigmoid((if_logits[..., h:] + p["b_f"]).astype(jnp.float32))
+    m_new = jnp.maximum(f_log + state["m"], i_log)
+    fs = jnp.exp(f_log + state["m"] - m_new)
+    is_ = jnp.exp(i_log - m_new)
+    c_new = state["C"] * fs[..., None, None] + is_[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", v, k / jnp.sqrt(hd)
+    )
+    n_new = state["n"] * fs[..., None] + is_[..., None] * k / jnp.sqrt(hd)
+    num = jnp.einsum("bhde,bhe->bhd", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", n_new, q)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, up).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(gate)
+    return x + y @ p["w_down"], {"C": c_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_in": dense_init(ks[0], (d, 4 * d), dtype),          # z,i,f,o pre-acts
+        "r": dense_init(ks[1], (h, hd, 4 * hd), dtype, scale=0.1),  # block-diag recurrence
+        "b": jnp.zeros((4 * d,), dtype),
+        "out_norm": jnp.ones((d,), dtype),
+        "w_down": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def slstm_seq(p: Params, x: jax.Array, cfg: ArchConfig,
+              state: Dict | None = None) -> Tuple[jax.Array, Dict]:
+    """Sequential sLSTM over time.  x: (B, S, d)."""
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    b, s, _ = x.shape
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    pre = (xn @ p["w_in"] + p["b"]).astype(jnp.float32)       # (B,S,4d)
+
+    if state is None:
+        state = init_slstm_state(cfg, b)
+
+    def step(carry, pre_t):
+        c, n, m, hprev = carry                                 # (B,H,hd) each, m (B,H)
+        rec = jnp.einsum("bhd,hde->bhe", hprev, p["r"].astype(jnp.float32))  # (B,H,4hd)
+        zifo = pre_t.reshape(b, h, 4 * hd) + rec
+        z, i_, f_, o_ = jnp.split(zifo, 4, axis=-1)
+        i_log = jnp.mean(i_, -1)                               # scalar gate per head
+        f_log = jax.nn.log_sigmoid(jnp.mean(f_, -1))
+        m_new = jnp.maximum(f_log + m, i_log)
+        fs = jnp.exp(f_log + m - m_new)[..., None]
+        is_ = jnp.exp(i_log - m_new)[..., None]
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o_)
+        c_new = fs * c + is_ * z
+        n_new = fs * n + is_
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    init = (state["c"], state["n"], state["m"], state["h"])
+    (c, n, m, hlast), ys = jax.lax.scan(step, init, jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    return x + y @ p["w_down"], {"c": c, "n": n, "m": m, "h": hlast}
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> Dict[str, jax.Array]:
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    return {
+        "c": jnp.zeros((batch, h, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, h, hd), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Full model (12 unrolled layers; sLSTM at cfg.slstm_at)
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    layers = []
+    for li in range(cfg.n_layers):
+        if li in cfg.slstm_at:
+            layers.append(init_slstm(ks[li], cfg, dtype))
+        else:
+            layers.append(init_mlstm(ks[li], cfg, dtype))
+    return {
+        "embed": dense_init(ks[-2], (cfg.vocab, cfg.d_model), dtype, scale=1.0),
+        "layers": layers,
+        "norm_f": jnp.ones((cfg.d_model,), dtype),
+        "unembed": dense_init(ks[-1], (cfg.d_model, cfg.vocab), dtype),
+    }
+
+
+def forward(params, tokens, cfg: ArchConfig, remat: bool = False,
+            compute_dtype=jnp.bfloat16, extra_embeds=None, unembed: bool = True):
+    x = params["embed"][tokens].astype(compute_dtype)
+    for li, layer in enumerate(params["layers"]):
+        p = jax.tree.map(lambda w: w.astype(compute_dtype) if w.dtype == jnp.float32 else w,
+                         layer)
+        if li in cfg.slstm_at:
+            x, _ = slstm_seq(p, x, cfg)
+        else:
+            x = mlstm_parallel(p, x, cfg)
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    if not unembed:
+        return x
+    return (x @ params["unembed"].astype(compute_dtype)).astype(jnp.float32)
+
+
+def lm_loss(params, batch, cfg: ArchConfig, remat=False, compute_dtype=jnp.bfloat16):
+    hidden = forward(params, batch["tokens"], cfg, compute_dtype=compute_dtype,
+                     unembed=False)
+    return chunked_lm_loss(hidden, params["unembed"], batch["labels"],
+                           compute_dtype=compute_dtype)
+
+
+def init_state(cfg: ArchConfig, batch: int):
+    states = []
+    for li in range(cfg.n_layers):
+        if li in cfg.slstm_at:
+            states.append(init_slstm_state(cfg, batch))
+        else:
+            states.append(init_mlstm_state(cfg, batch))
+    return states
+
+
+def decode_step(params, states, token, pos, cfg: ArchConfig, compute_dtype=jnp.bfloat16):
+    x = params["embed"][token][:, None, :].astype(compute_dtype)
+    new_states = []
+    for li, (layer, st) in enumerate(zip(params["layers"], states)):
+        p = jax.tree.map(lambda w: w.astype(compute_dtype) if w.dtype == jnp.float32 else w,
+                         layer)
+        if li in cfg.slstm_at:
+            y, st_new = slstm_seq(p, x, cfg, state=st)
+        else:
+            y, st_new = mlstm_decode(p, x, cfg=cfg, state=st)
+        x = y
+        new_states.append(st_new)
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    logits = (x[:, 0, :] @ params["unembed"].astype(compute_dtype)).astype(jnp.float32)
+    return logits, new_states

@@ -1,0 +1,119 @@
+"""Batched serving engine: continuous-batching style prefill + decode.
+
+Requests join a fixed-size slot table (static shapes for jit); each engine
+step decodes one token for every active slot; finished slots (EOS or
+max-len) free up and are refilled from the queue.  Prefill for a new
+request runs the full forward and writes its KV into the slot.
+
+This is the serving loop the ``decode_*`` shape cells lower: one engine
+step == one ``decode_step`` over the whole slot batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.common import ArchConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 32
+    out: Optional[List[int]] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, max_batch: int = 8,
+                 max_seq: int = 512, eos_id: int = 2):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        mod = api.module_for(cfg)
+        if cfg.family == "ssm":
+            self.cache = mod.init_state(cfg, max_batch)
+        elif cfg.family == "encdec":
+            raise NotImplementedError("use encdec.prefill/decode_step directly")
+        else:
+            self.cache = mod.init_cache(cfg, max_batch, max_seq)
+        self._decode = jax.jit(api.make_decode_step(cfg))
+        self._forward = jax.jit(
+            lambda p, t: api.module_for(cfg).forward(p, t, cfg, remat=False)
+        )
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)
+        self.remaining = np.zeros(max_batch, np.int32)
+        self.last_token = np.zeros(max_batch, np.int32)
+        self.queue: List[Request] = []
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request):
+        req.out = []
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # prefill: teacher-forced forward over the prompt, then seed
+                # the slot cache token-by-token (simple, correct; a fused
+                # prefill-into-slot kernel is the production path).
+                toks = req.prompt[: self.max_seq - req.max_new]
+                for t, tok in enumerate(toks):
+                    logits, self.cache = self._step_one(i, tok, t)
+                self.pos[i] = len(toks)
+                self.last_token[i] = int(jnp.argmax(logits[i]))
+                self.remaining[i] = req.max_new
+
+    def _step_one(self, slot: int, token: int, position: int):
+        tok_vec = jnp.asarray(self.last_token)
+        tok_vec = tok_vec.at[slot].set(token)
+        return self._decode(self.params, self.cache, tok_vec, jnp.int32(position))
+
+    # -- one engine tick: decode one token for all active slots --------------
+    def step(self) -> Dict[int, int]:
+        self._admit()
+        active = [i for i in range(self.max_batch) if self.slots[i] is not None]
+        if not active:
+            return {}
+        pos = int(self.pos[active[0]])  # static-shape simplification: common pos
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_token), jnp.int32(pos)
+        )
+        new_tokens = np.asarray(jnp.argmax(logits, -1))
+        emitted = {}
+        for i in active:
+            tok = int(new_tokens[i])
+            req = self.slots[i]
+            req.out.append(tok)
+            emitted[req.rid] = tok
+            self.pos[i] += 1
+            self.remaining[i] -= 1
+            self.last_token[i] = tok
+            if tok == self.eos_id or self.remaining[i] <= 0 or self.pos[i] >= self.max_seq - 1:
+                self.slots[i] = None
+        return emitted
+
+    def run_until_drained(self, max_ticks: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        seen = set()
+        for _ in range(max_ticks):
+            if not self.queue and all(s is None for s in self.slots):
+                break
+            before = {s.rid for s in self.slots if s}
+            self.step()
+            after = {s.rid for s in self.slots if s}
+            # requests that left their slot this tick are finished
+            for req_id in before - after:
+                if req_id not in seen:
+                    seen.add(req_id)
+        return done

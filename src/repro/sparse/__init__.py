@@ -1,0 +1,4 @@
+"""Static-capacity sparse matrix substrate (TPU-friendly padded CSR)."""
+from repro.sparse.csr import SpCSR, from_dense, to_dense, spmm, spmm_t, from_coo
+
+__all__ = ["SpCSR", "from_dense", "to_dense", "spmm", "spmm_t", "from_coo"]

@@ -1,0 +1,5 @@
+from repro.training.optimizer import AdamW, AdamState
+from repro.training.compression import (
+    make_compressed_grad_fn, init_error_state, sparsify_tree,
+)
+__all__ = ["AdamW", "AdamState", "make_compressed_grad_fn", "init_error_state", "sparsify_tree"]

@@ -1,0 +1,71 @@
+"""Minimal AdamW + cosine schedule (self-contained; optax not available
+offline).  States are pytrees with the same structure as params so every
+state leaf inherits the parameter's PartitionSpec (ZeRO-style: optimizer
+state is sharded exactly as far as the params are)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup: int = 200
+    total_steps: int = 10000
+
+    def init(self, params: Params) -> AdamState:
+        # two independent zero trees — sharing one would alias mu/nu buffers
+        # and break donation (same buffer donated twice)
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamState(jnp.zeros((), jnp.int32), mu, nu)
+
+    def schedule(self, step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(self.warmup, 1), 1.0)
+        prog = jnp.clip((s - self.warmup) / max(self.total_steps - self.warmup, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.lr * warm * (0.1 + 0.9 * cos)
+
+    def update(self, grads: Params, state: AdamState, params: Params
+               ) -> Tuple[Params, AdamState]:
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1, b2 = self.b1, self.b2
+
+        def upd(g, m, n, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            n_new = b2 * n + (1 - b2) * g32 * g32
+            mhat = m_new / (1 - b1 ** step.astype(jnp.float32))
+            nhat = n_new / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(nhat) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, n_new
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_n = tdef.flatten_up_to(state.nu)
+        out = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_m, flat_n, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_n = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamState(step, new_m, new_n)

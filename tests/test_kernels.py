@@ -1,0 +1,138 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.bsr import bsr_from_dense, bsr_to_dense, bsr_transpose
+from repro.kernels.bsr_spmm import bsr_spmm
+from repro.kernels.project_mask import project_mask
+from repro.kernels.gram import gram
+
+
+def _rand_sparse(rng, n, m, density=0.05, dtype=np.float32):
+    a = rng.random((n, m)).astype(dtype)
+    a[rng.random((n, m)) > density] = 0
+    return a
+
+
+@pytest.mark.parametrize("n,m,k", [(128, 128, 8), (300, 200, 40),
+                                   (64, 512, 128), (257, 129, 33)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_bsr_spmm_shapes(n, m, k, dtype):
+    rng = np.random.default_rng(n + m + k)
+    a = _rand_sparse(rng, n, m, dtype=dtype)
+    bsr = bsr_from_dense(a, bm=64, bk=64)
+    u = rng.standard_normal((m, k)).astype(dtype)
+    out = bsr_spmm(bsr, jnp.asarray(u), interpret=True)
+    expect = ref.bsr_spmm_ref(bsr, jnp.asarray(u))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bsr_roundtrip_and_transpose():
+    rng = np.random.default_rng(0)
+    a = _rand_sparse(rng, 200, 150)
+    bsr = bsr_from_dense(a, bm=32, bk=32)
+    np.testing.assert_allclose(np.asarray(bsr_to_dense(bsr)), a)
+    at = bsr_transpose(bsr)
+    np.testing.assert_allclose(np.asarray(bsr_to_dense(at)), a.T)
+
+
+@pytest.mark.parametrize("shape", [(100, 37), (256, 256), (17, 512), (1, 1)])
+@pytest.mark.parametrize("tau", [0.0, 0.5, 2.0])
+def test_project_mask(shape, tau):
+    x = jax.random.normal(jax.random.PRNGKey(7), shape)
+    out = project_mask(x, jnp.float32(tau), interpret=True)
+    expect = ref.project_mask_ref(x, jnp.float32(tau))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("n,k", [(1000, 16), (513, 40), (64, 5), (2048, 128)])
+def test_gram(n, k):
+    u = jax.random.normal(jax.random.PRNGKey(n), (n, k))
+    out = gram(u, interpret=True)
+    expect = ref.gram_ref(u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_spmm_bf16():
+    rng = np.random.default_rng(3)
+    a = _rand_sparse(rng, 128, 128)
+    bsr = bsr_from_dense(a.astype(np.float32), bm=64, bk=64)
+    bsr = type(bsr)(bsr.tiles.astype(jnp.bfloat16), bsr.block_cols, bsr.shape)
+    u = jnp.asarray(rng.standard_normal((128, 16)), dtype=jnp.bfloat16)
+    out = bsr_spmm(bsr, u, interpret=True)
+    expect = bsr_to_dense(bsr).astype(jnp.float32) @ u.astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32),
+                               np.asarray(expect), rtol=5e-2, atol=1e-1)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention kernel
+# ---------------------------------------------------------------------------
+
+def _flash_oracle(q, k, v, causal, groups):
+    kf = jnp.repeat(k, groups, axis=1)
+    vf = jnp.repeat(v, groups, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q, kf) / jnp.sqrt(q.shape[-1])
+    if causal:
+        sq, t = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(t)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s.astype(jnp.float32), -1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, vf.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("b,h,hkv,s,t,hd,causal", [
+    (2, 4, 4, 128, 128, 32, True),
+    (1, 8, 2, 256, 256, 64, True),
+    (2, 4, 2, 64, 192, 32, False),
+    (1, 2, 1, 96, 96, 16, True),
+])
+def test_flash_attention_vs_oracle(b, h, hkv, s, t, hd, causal):
+    from repro.kernels.flash_attention import flash_attention
+    key = jax.random.PRNGKey(b + s)
+    q = jax.random.normal(key, (b, h, s, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, hkv, t, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, hkv, t, hd))
+    out = flash_attention(q, k, v, causal=causal, bq=64, bk=64,
+                          groups=h // hkv, interpret=True)
+    expect = _flash_oracle(q, k, v, causal, h // hkv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention import flash_attention
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (1, 2, 128, 32)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 128, 32)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 128, 32)).astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    expect = _flash_oracle(q.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), True, 1)
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32),
+                               np.asarray(expect), rtol=5e-2, atol=5e-2)
+
+
+def test_model_attention_flash_path_matches():
+    """common.attention with the flash kernel enabled == XLA path."""
+    from repro.models import common
+    from repro.configs import ARCHS, smoke_config
+    cfg = smoke_config(ARCHS["llama3.2-1b"])
+    key = jax.random.PRNGKey(3)
+    p = common.init_attention(key, cfg)
+    x = jax.random.normal(key, (2, 64, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+    ref_out = common.attention(p, x, cfg, pos)
+    common.use_flash_kernel(True, interpret=True)
+    try:
+        flash_out = common.attention(p, x, cfg, pos)
+    finally:
+        common.use_flash_kernel(False)
+    np.testing.assert_allclose(np.asarray(flash_out), np.asarray(ref_out),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,58 @@
+"""Eq. 3.3 clustering accuracy + residual metrics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import (
+    clustering_accuracy, mean_clustering_accuracy, relative_residual,
+)
+
+
+def test_acc_perfect():
+    """All docs of a topic from one journal -> Acc == 1."""
+    dj = jnp.asarray([0] * 10 + [1] * 10)
+    belongs = jnp.asarray([True] * 10 + [False] * 10)
+    acc = clustering_accuracy(dj, belongs, 2)
+    assert float(acc) == pytest.approx(1.0)
+
+
+def test_acc_uniform_is_zero():
+    """Docs uniformly spread over journals -> Acc == 0."""
+    dj = jnp.asarray([0, 1, 2, 3, 4] * 4)
+    belongs = jnp.asarray([True] * 20)
+    acc = clustering_accuracy(dj, belongs, 5)
+    assert float(acc) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_acc_single_doc_is_one():
+    dj = jnp.asarray([0, 1, 2])
+    belongs = jnp.asarray([True, False, False])
+    assert float(clustering_accuracy(dj, belongs, 3)) == 1.0
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(0, 10_000), m=st.integers(6, 60))
+def test_acc_bounds(seed, m):
+    """Property: Acc in [-eps..1] for arbitrary memberships."""
+    rng = np.random.default_rng(seed)
+    dj = jnp.asarray(rng.integers(0, 5, m))
+    belongs = jnp.asarray(rng.random(m) > 0.5)
+    acc = float(clustering_accuracy(dj, belongs, 5))
+    assert acc <= 1.0 + 1e-6
+    # lower bound: alpha-normalization can dip slightly below 0 for
+    # adversarial small clusters, but never below -1
+    assert acc >= -1.0
+
+
+def test_mean_accuracy_shape():
+    dj = jnp.asarray([0, 0, 1, 1, 2])
+    v = jnp.asarray(np.random.default_rng(0).random((5, 3)))
+    acc = mean_clustering_accuracy(dj, v, 3)
+    assert acc.shape == ()
+
+
+def test_relative_residual():
+    u = jnp.ones((4, 3))
+    assert float(relative_residual(u, u)) == 0.0
+    assert float(relative_residual(u, jnp.zeros_like(u))) == pytest.approx(1.0)

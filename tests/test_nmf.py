@@ -1,0 +1,103 @@
+"""System tests for the paper's algorithms (Alg. 1, 2, 3) and claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    als_nmf, enforced_sparsity_nmf, sequential_als_nmf, init_u0,
+)
+from repro.data import synthetic_journal_corpus
+from repro.sparse import to_dense, from_dense
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    a_sp, dj = synthetic_journal_corpus(n_terms=300, n_docs=200,
+                                        n_journals=5, seed=1)
+    return a_sp, to_dense(a_sp), dj
+
+
+def test_projected_als_decreases_error(small_problem):
+    _, a, _ = small_problem
+    u0 = init_u0(jax.random.PRNGKey(2), a.shape[0], 5)
+    res = als_nmf(a, u0, iters=30)
+    assert float(res.error[-1]) < float(res.error[0])
+    assert jnp.all(res.u >= 0) and jnp.all(res.v >= 0)   # non-negativity
+    assert float(res.residual[-1]) < 0.1                  # converged-ish
+
+
+def test_enforced_converges(small_problem):
+    """Paper Fig. 2: enforced-sparsity run converges with NNZ(U) == t."""
+    _, a, _ = small_problem
+    u0 = init_u0(jax.random.PRNGKey(2), a.shape[0], 5)
+    res = enforced_sparsity_nmf(a, u0, t_u=55, iters=30)
+    assert int(res.nnz_u[-1]) <= 55 + 5      # ties tolerance
+    assert float(res.error[-1]) < float(res.error[0])
+    # error stabilizes (not diverging)
+    assert float(res.error[-1]) <= float(res.error[5]) + 0.02
+
+
+def test_sparse_dense_path_agree(small_problem):
+    a_sp, a, _ = small_problem
+    u0 = init_u0(jax.random.PRNGKey(2), a.shape[0], 5)
+    r1 = enforced_sparsity_nmf(a, u0, t_u=55, iters=10)
+    r2 = enforced_sparsity_nmf(a_sp, u0, t_u=55, iters=10)
+    np.testing.assert_allclose(np.asarray(r1.error), np.asarray(r2.error),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_exact_vs_bisect_enforcement(small_problem):
+    _, a, _ = small_problem
+    u0 = init_u0(jax.random.PRNGKey(2), a.shape[0], 5)
+    r1 = enforced_sparsity_nmf(a, u0, t_u=55, iters=10, exact=True)
+    r2 = enforced_sparsity_nmf(a, u0, t_u=55, iters=10, exact=False)
+    np.testing.assert_allclose(float(r1.error[-1]), float(r2.error[-1]),
+                               rtol=5e-2)
+
+
+def test_nnz_bounded(small_problem):
+    """Paper Fig. 6: max stored NNZ is bounded by enforcement level."""
+    _, a, _ = small_problem
+    n, m = a.shape
+    u0 = init_u0(jax.random.PRNGKey(2), n, 5, nnz=100)
+    res = enforced_sparsity_nmf(a, u0, t_u=80, t_v=80, iters=15)
+    assert int(res.max_nnz) <= 2 * (80 + 10)
+    assert int(res.nnz_u[-1]) <= 85 and int(res.nnz_v[-1]) <= 85
+
+
+def test_columnwise_even(small_problem):
+    """Paper §4: column-wise enforcement spreads nonzeros evenly."""
+    _, a, _ = small_problem
+    u0 = init_u0(jax.random.PRNGKey(2), a.shape[0], 5)
+    res = enforced_sparsity_nmf(a, u0, t_u=10, columnwise=True, iters=15)
+    per_col = np.asarray(jnp.sum(res.u != 0, axis=0))
+    assert per_col.max() <= 10
+    assert per_col.std() <= 3.0
+
+
+def test_sequential_als(small_problem):
+    """Alg. 3 converges block-by-block with decreasing overall error."""
+    _, a, _ = small_problem
+    u0 = init_u0(jax.random.PRNGKey(3), a.shape[0], 1)
+    res = sequential_als_nmf(a, u0, k2=1, blocks=5, iters=10, t_u=50, t_v=150)
+    es = np.asarray(res.error)
+    assert es[-1] < es[0]            # more topics -> better approximation
+    assert jnp.all(res.u >= 0)
+    # each block contributed nonzeros to its own column
+    per_col = np.asarray(jnp.sum(res.u != 0, axis=0))
+    assert (per_col > 0).all()
+
+
+def test_sqnorm_error_formula(small_problem):
+    """relative_error_sparse == dense relative_error."""
+    from repro.core.metrics import relative_error, relative_error_sparse
+    a_sp, a, _ = small_problem
+    u = jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (a.shape[0], 5)))
+    v = jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (a.shape[1], 5)))
+    e_dense = relative_error(a, u, v)
+    rows = jnp.broadcast_to(jnp.arange(a_sp.shape[0])[:, None],
+                            a_sp.cols.shape).ravel()
+    e_sparse = relative_error_sparse(
+        a_sp.values.ravel(), rows, a_sp.cols.ravel(), a_sp.sqnorm(), u, v)
+    np.testing.assert_allclose(float(e_dense), float(e_sparse), rtol=1e-4)

@@ -1,0 +1,65 @@
+"""Property + unit tests for the paper's core primitive: top-t projection."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topk import (
+    topk_project_exact, topk_project_bisect, topk_project_columns, nnz,
+)
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    n=st.integers(4, 200),
+    t_frac=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bisect_matches_exact(n, t_frac, seed):
+    """Bisection threshold select == exact sort-based top-t (no ties)."""
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n,)))
+    t = max(int(n * t_frac), 1)
+    xe = topk_project_exact(jnp.asarray(x), t)
+    xb = topk_project_bisect(jnp.asarray(x), t)
+    assert int(nnz(xe)) == min(t, int(np.sum(x != 0)))
+    np.testing.assert_allclose(np.asarray(xe), np.asarray(xb), rtol=0, atol=0)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    rows=st.integers(2, 40), cols=st.integers(1, 8),
+    t_frac=st.floats(0.02, 0.9), seed=st.integers(0, 2**31 - 1),
+)
+def test_projection_properties(rows, cols, t_frac, seed):
+    """Invariants: idempotent, support shrinks, kept values unchanged."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols))
+    t = max(int(x.size * t_frac), 1)
+    y = topk_project_exact(x, t)
+    # kept entries are original values
+    mask = y != 0
+    np.testing.assert_array_equal(np.asarray(y)[np.asarray(mask)],
+                                  np.asarray(x)[np.asarray(mask)])
+    # idempotent
+    y2 = topk_project_exact(y, t)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+    # magnitude guarantee: min kept >= max dropped
+    kept = np.abs(np.asarray(x)[np.asarray(mask)])
+    dropped = np.abs(np.asarray(x)[~np.asarray(mask)])
+    if kept.size and dropped.size:
+        assert kept.min() >= dropped.max() - 1e-7
+
+
+def test_columnwise_even_distribution():
+    x = jax.random.normal(jax.random.PRNGKey(1), (100, 7))
+    y = topk_project_columns(x, 5)
+    per_col = np.asarray(jnp.sum(y != 0, axis=0))
+    assert (per_col == 5).all()
+
+
+def test_edge_cases():
+    x = jnp.zeros((10, 3))
+    assert int(nnz(topk_project_bisect(x, 5))) == 0
+    x = jnp.ones((4,))
+    assert int(nnz(topk_project_exact(x, 10))) == 4  # t > size keeps all
+    assert int(nnz(topk_project_bisect(x, 0))) == 0
