@@ -3,14 +3,16 @@
 Fig. 4: accuracy when enforcing sparsity for U only / V only / both.
 Fig. 5: enforce-during-ALS (Alg. 2) vs enforce-after-ALS (Alg. 1 + one
 final projection) — the paper's key accuracy claim is that they match.
+
+All runs go through the unified ``EnforcedNMF`` estimator.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import als_nmf, enforced_sparsity_nmf
 from repro.core.metrics import mean_clustering_accuracy
 from repro.core.topk import topk_project_bisect
+from repro.nmf import EnforcedNMF, NMFConfig, Sparsity
 from benchmarks.common import pubmed_like, u0_for
 
 
@@ -20,27 +22,29 @@ def run(iters: int = 50, small: bool = False):
     u0 = u0_for(a, k=5)
     if small:
         iters = 15
+
+    def fit(solver="enforced", t_u=None, t_v=None):
+        cfg = NMFConfig(k=5, iters=iters, solver=solver,
+                        sparsity=Sparsity(t_u=t_u, t_v=t_v),
+                        track_error=False)
+        return EnforcedNMF(cfg).fit(a, u0=u0).result_
+
     m = a.shape[1]
     nnz_grid = [m // 50, m // 10, m // 4, m] if not small else [m // 10, m // 4]
     rows = []
     # Fig. 4: during-ALS enforcement, three modes
     for t in nnz_grid:
         for mode in ("U", "V", "UV"):
-            res = enforced_sparsity_nmf(
-                a, u0,
-                t_u=t if "U" in mode else None,
-                t_v=t if "V" in mode else None,
-                iters=iters, track_error=False,
-            )
+            res = fit(t_u=t if "U" in mode else None,
+                      t_v=t if "V" in mode else None)
             rows.append({
                 "fig": 4, "nnz": t, "mode": mode,
                 "accuracy": float(mean_clustering_accuracy(dj, res.v, 5)),
             })
     # Fig. 5: during vs after
-    dense = als_nmf(a, u0, iters=iters, track_error=False)
+    dense = fit(solver="als")
     for t in nnz_grid:
-        during = enforced_sparsity_nmf(a, u0, t_u=t, t_v=t, iters=iters,
-                                       track_error=False)
+        during = fit(t_u=t, t_v=t)
         v_after = topk_project_bisect(dense.v, t)
         rows.append({
             "fig": 5, "nnz": t,

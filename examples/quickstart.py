@@ -1,36 +1,46 @@
-"""Quickstart: enforced-sparsity NMF topic model in ~30 lines.
+"""Quickstart: enforced-sparsity NMF topic model via the estimator API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
+import jax.numpy as jnp
 
-from repro.core import enforced_sparsity_nmf, init_u0
 from repro.core.metrics import mean_clustering_accuracy
 from repro.data import synthetic_journal_corpus
+from repro.nmf import EnforcedNMF, NMFConfig, Sparsity
 
 # 1. a corpus: 2000 terms x 1000 docs with 5 planted "journals"
 a, doc_journal = synthetic_journal_corpus(
     n_terms=2000, n_docs=1000, n_journals=5, seed=0)
 print(f"term/document matrix: {a.shape}, nnz={int(a.nnz())}")
 
-# 2. five-topic NMF with the paper's Algorithm 2: U capped at 55 nonzeros
-u0 = init_u0(jax.random.PRNGKey(0), a.shape[0], k=5)
-res = enforced_sparsity_nmf(a, u0, t_u=55, t_v=2000, iters=50)
+# 2. five-topic NMF with the paper's Algorithm 2: U capped at 55 nonzeros.
+#    One estimator front door for every solver — swap solver="als" /
+#    "sequential" / "distributed" without touching anything else.
+model = EnforcedNMF(NMFConfig(
+    k=5, iters=50, solver="enforced", sparsity=Sparsity(t_u=55, t_v=2000)))
+model.fit(a)
 
-print(f"final relative error  : {float(res.error[-1]):.4f}")
-print(f"final residual        : {float(res.residual[-1]):.2e}")
-print(f"NNZ(U)={int(res.nnz_u[-1])}  NNZ(V)={int(res.nnz_v[-1])}  "
+res = model.result_
+print(f"final relative error  : {res.final_error:.4f}")
+print(f"final residual        : {res.final_residual:.2e}")
+print(f"NNZ(U)={res.final_nnz_u}  NNZ(V)={res.final_nnz_v}  "
       f"max stored={int(res.max_nnz)} "
       f"(dense would be {(a.shape[0]+a.shape[1])*5})")
 
 # 3. cluster quality against the planted journals (paper Eq. 3.3)
-import jax.numpy as jnp
-acc = mean_clustering_accuracy(jnp.asarray(doc_journal), res.v, 5)
+acc = mean_clustering_accuracy(jnp.asarray(doc_journal), model.v_, 5)
 print(f"clustering accuracy   : {float(acc):.3f}")
 
-# 4. top terms per topic (indices — a real corpus maps these to words)
+# 4. fold in documents the model has never seen (topic inference, U frozen)
+a_new, _ = synthetic_journal_corpus(
+    n_terms=2000, n_docs=100, n_journals=5, seed=7)
+v_new = model.transform(a_new)
+print(f"fold-in               : {v_new.shape[0]} new docs -> topics "
+      f"{jnp.argmax(v_new, axis=1)[:10].tolist()} ...")
+
+# 5. top terms per topic (indices — a real corpus maps these to words)
 for topic in range(5):
-    col = res.u[:, topic]
+    col = model.u_[:, topic]
     top = jnp.argsort(-col)[:5]
     print(f"topic {topic}: terms {top.tolist()} (weights "
           f"{[round(float(col[i]), 3) for i in top]})")

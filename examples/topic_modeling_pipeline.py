@@ -1,11 +1,15 @@
 """End-to-end driver (the paper's kind: large-scale topic modeling).
 
-Pipeline: corpus -> term/document matrix -> enforced-sparsity ALS for a few
-hundred iterations, with periodic compressed-sparse checkpointing and
-restart support -- the NMF analogue of a production training run.
+Pipeline: corpus -> term/document matrix -> enforced-sparsity ALS through
+the unified ``EnforcedNMF`` estimator, with periodic compressed-sparse
+checkpointing and restart support, then topic *serving*: unseen documents
+are folded into the fitted topic space (``transform``, U frozen) through the
+micro-batching ``TopicServer`` — the NMF analogue of a production train +
+serve stack.
 
     PYTHONPATH=src python examples/topic_modeling_pipeline.py \
-        [--terms 20112 --docs 7510 --iters 200 --ckpt /tmp/nmf_ckpt]
+        [--terms 20112 --docs 7510 --iters 200 --ckpt /tmp/nmf_ckpt] \
+        [--stream]   # fit by mini-batch partial_fit instead of full-batch
 """
 import argparse
 import os
@@ -17,9 +21,11 @@ import jax.numpy as jnp
 from repro.checkpoint import (
     save_nmf_factors_sparse, restore_nmf_factors_sparse,
 )
-from repro.core import enforced_sparsity_nmf, init_u0
 from repro.core.metrics import mean_clustering_accuracy
 from repro.data import synthetic_journal_corpus
+from repro.nmf import EnforcedNMF, NMFConfig, Sparsity
+from repro.serving import TopicRequest, TopicServer
+from repro.sparse import to_dense
 
 
 def main():
@@ -32,6 +38,8 @@ def main():
                     help="checkpoint rounds (iters split across them)")
     ap.add_argument("--t-u", type=int, default=500)
     ap.add_argument("--t-v", type=int, default=3000)
+    ap.add_argument("--stream", action="store_true",
+                    help="fit with streaming partial_fit over doc chunks")
     ap.add_argument("--ckpt", default="/tmp/nmf_pipeline_ckpt")
     args = ap.parse_args()
 
@@ -42,37 +50,85 @@ def main():
     print(f"   {a.shape[0]}x{a.shape[1]}, nnz={int(a.nnz())} "
           f"({time.time()-t0:.1f}s)")
 
-    print("== stage 2: enforced-sparsity ALS with checkpoint/restart ==")
+    config = NMFConfig(
+        k=args.topics, iters=args.iters // args.rounds,
+        sparsity=Sparsity(t_u=args.t_u, t_v=args.t_v))
+    model = EnforcedNMF(config)
+
     os.makedirs(args.ckpt, exist_ok=True)
     ck_path = os.path.join(args.ckpt, "factors.npz")
-    if os.path.exists(ck_path):
-        u, _ = restore_nmf_factors_sparse(ck_path)
-        print(f"   resuming from {ck_path}")
-        u0 = jnp.maximum(u, 0) + 1e-6  # resume from checkpointed U
-    else:
-        u0 = init_u0(jax.random.PRNGKey(0), args.terms, args.topics)
 
-    per_round = args.iters // args.rounds
-    for rnd in range(args.rounds):
-        t0 = time.time()
-        res = enforced_sparsity_nmf(
-            a, u0, t_u=args.t_u, t_v=args.t_v, iters=per_round)
-        jax.block_until_ready(res.u)
-        sizes = save_nmf_factors_sparse(ck_path, res.u, res.v)
-        u0 = res.u
-        print(f"   round {rnd+1}/{args.rounds}: "
-              f"err={float(res.error[-1]):.4f} "
-              f"resid={float(res.residual[-1]):.2e} "
-              f"nnz(U)={int(res.nnz_u[-1])} "
-              f"ckpt={sum(sizes.values())//1024}KB "
-              f"({time.time()-t0:.1f}s)")
+    if args.stream:
+        print("== stage 2: streaming partial_fit over document chunks ==")
+        # slice document columns sparsely (scipy CSC) so peak memory stays at
+        # one chunk, never the dense corpus; dense fallback without scipy
+        try:
+            from repro.sparse import from_scipy, to_scipy
+
+            a_cols = to_scipy(a).tocsc()
+            get_chunk = lambda lo, hi: from_scipy(a_cols[:, lo:hi])
+        except ImportError:
+            a_dense = to_dense(a)
+            get_chunk = lambda lo, hi: a_dense[:, lo:hi]
+        n_chunks = args.rounds * 2
+        chunk_w = -(-args.docs // n_chunks)
+        for i in range(n_chunks):
+            t0 = time.time()
+            chunk = get_chunk(i * chunk_w, min((i + 1) * chunk_w, args.docs))
+            model.partial_fit(chunk)
+            print(f"   chunk {i+1}/{n_chunks} ({chunk.shape[1]} docs): "
+                  f"stream total {model.n_docs_seen_} docs "
+                  f"({time.time()-t0:.1f}s)")
+        v_full = model.transform(a)
+        sizes = save_nmf_factors_sparse(ck_path, model.u_, v_full)
+        print(f"   ckpt={sum(sizes.values())//1024}KB")
+    else:
+        print("== stage 2: enforced-sparsity ALS with checkpoint/restart ==")
+        if os.path.exists(ck_path):
+            u, _ = restore_nmf_factors_sparse(ck_path)
+            print(f"   resuming from {ck_path}")
+            u0 = jnp.maximum(u, 0) + 1e-6  # resume from checkpointed U
+        else:
+            u0 = None  # seeded default from the config
+        for rnd in range(args.rounds):
+            t0 = time.time()
+            model.fit(a, u0=u0)
+            jax.block_until_ready(model.u_)
+            sizes = save_nmf_factors_sparse(ck_path, model.u_, model.v_)
+            u0 = model.u_
+            res = model.result_
+            print(f"   round {rnd+1}/{args.rounds}: "
+                  f"err={res.final_error:.4f} "
+                  f"resid={res.final_residual:.2e} "
+                  f"nnz(U)={res.final_nnz_u} "
+                  f"ckpt={sum(sizes.values())//1024}KB "
+                  f"({time.time()-t0:.1f}s)")
+        v_full = model.v_
 
     print("== stage 3: evaluation ==")
-    acc = mean_clustering_accuracy(jnp.asarray(dj), res.v, args.topics)
+    acc = mean_clustering_accuracy(jnp.asarray(dj), v_full, args.topics)
     print(f"   clustering accuracy (Eq. 3.3): {float(acc):.3f}")
-    print(f"   memory: max stored NNZ {int(res.max_nnz)} vs dense "
-          f"{(args.terms+args.docs)*args.topics} "
-          f"({(args.terms+args.docs)*args.topics/max(int(res.max_nnz),1):.1f}x saving)")
+    stored = int(jnp.sum(model.u_ != 0) + jnp.sum(v_full != 0))
+    dense = (args.terms + args.docs) * args.topics
+    print(f"   memory: stored NNZ {stored} vs dense {dense} "
+          f"({dense/max(stored, 1):.1f}x saving)")
+
+    print("== stage 4: topic serving (fold-in of unseen documents) ==")
+    a_new, dj_new = synthetic_journal_corpus(
+        n_terms=args.terms, n_docs=64, n_journals=args.topics, seed=123)
+    server = TopicServer(model, max_batch=16)
+    a_new_np = jnp.asarray(to_dense(a_new))
+    for rid in range(a_new.shape[1]):
+        col = a_new_np[:, rid]
+        terms = [(int(i), float(col[i])) for i in jnp.nonzero(col)[0]]
+        server.submit(TopicRequest(rid=rid, terms=terms, top=1))
+    t0 = time.time()
+    done = server.run_until_drained()
+    dt = time.time() - t0
+    print(f"   served {server.served} docs in {dt:.2f}s "
+          f"({server.served/max(dt, 1e-9):.0f} docs/s)")
+    hits = sum(1 for req in done if req.topics)
+    print(f"   {hits}/{len(done)} documents assigned a topic")
 
 
 if __name__ == "__main__":

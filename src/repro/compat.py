@@ -1,0 +1,30 @@
+"""Small jax version-compat surface.
+
+The repo targets the modern jax API (>= 0.6: top-level ``jax.shard_map``,
+``jax.set_mesh``); this module lets the NMF stack also run on the 0.4.x
+series, where ``shard_map`` lives under ``jax.experimental`` and the ambient
+mesh is set by entering the ``Mesh`` object itself.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["set_mesh", "shard_map", "SHARD_MAP_NO_CHECK"]
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - exercised only on older jax
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+#: kwargs disabling shard_map's replication checking — the flag is named
+#: check_vma on modern jax, check_rep on 0.4.x.
+SHARD_MAP_NO_CHECK = (
+    {"check_vma": False} if hasattr(jax, "shard_map") else {"check_rep": False}
+)
+
+
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Context manager making ``mesh`` the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # old jax: Mesh is itself the context manager

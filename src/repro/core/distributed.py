@@ -37,6 +37,8 @@ from repro.core.nmf import solve_gram
 
 __all__ = ["DistCSR", "distribute_csr", "dist_enforced_als", "make_dist_specs"]
 
+from repro.compat import SHARD_MAP_NO_CHECK, shard_map as _shard_map
+
 
 # ---------------------------------------------------------------------------
 # Distributed padded-CSR container (both orientations, local column ids)
@@ -246,12 +248,12 @@ def dist_enforced_als(
         (u, v), (rs, es) = jax.lax.scan(body, (u0, v0), None, length=iters)
         return u, v, rs, es
 
-    shard_fn = jax.shard_map(
+    shard_fn = _shard_map(
         step_fn,
         mesh=mesh,
         in_specs=(a_spec, a_spec, a_spec, a_spec, u_spec, v_spec),
         out_specs=(u_spec, v_spec, P(), P()),
-        check_vma=False,
+        **SHARD_MAP_NO_CHECK,
     )
     jitted = jax.jit(shard_fn)
 

@@ -5,8 +5,10 @@ Dry-run (the paper's "large" workload on 256/512 chips):
     PYTHONPATH=src python -m repro.launch.dryrun --nmf [--multi-pod]
 (launch/dryrun.py imports nmf_dryrun_cell from here)
 
-Real run (any size that fits one host):
+Real run (any size that fits one host), through the unified estimator:
     PYTHONPATH=src python -m repro.launch.nmf_run --config pubmed --t-u 5000
+    PYTHONPATH=src python -m repro.launch.nmf_run --config reuters \
+        --solver sequential --sparsity "t_u=55,t_v=2000,mode=global"
 """
 from __future__ import annotations
 
@@ -69,7 +71,9 @@ def nmf_dryrun_cell(mesh: jax.sharding.Mesh, *,
         for s in (a_spec, a_spec, a_spec, a_spec, u_spec, v_spec)
     )
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    from repro.compat import set_mesh
+
+    with set_mesh(mesh):
         jitted = jax.jit(
             run.jitted.__wrapped__,
             in_shardings=shardings,
@@ -100,12 +104,21 @@ def nmf_dryrun_cell(mesh: jax.sharding.Mesh, *,
 
 
 def main(argv=None):
+    from repro.nmf import available_solvers
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default="reuters",
                     choices=list(NMF_CONFIGS.keys()))
+    ap.add_argument("--solver", default="enforced",
+                    choices=available_solvers())
+    ap.add_argument("--sparsity", default=None,
+                    help="Sparsity spec, e.g. 't_u=5000,t_v=2000,mode=exact' "
+                         "or 'frac_u=0.02' (overrides --t-u/--t-v)")
     ap.add_argument("--iters", type=int, default=None)
     ap.add_argument("--t-u", type=int, default=None)
     ap.add_argument("--t-v", type=int, default=None)
+    ap.add_argument("--tol", type=float, default=0.0,
+                    help="early-stop tolerance on the relative residual")
     ap.add_argument("--small", action="store_true", help="1/8 scale")
     args = ap.parse_args(argv)
 
@@ -115,19 +128,29 @@ def main(argv=None):
     if args.small:
         n, m = n // 8, m // 8
     from repro.data import synthetic_journal_corpus
-    from repro.core import enforced_sparsity_nmf, init_u0
+    from repro.nmf import EnforcedNMF, NMFConfig, Sparsity
+
+    if args.sparsity is not None:
+        sparsity = Sparsity.parse(args.sparsity)
+    else:
+        sparsity = Sparsity(t_u=args.t_u, t_v=args.t_v)
 
     print(f"building {n}x{m} synthetic corpus ...", flush=True)
     a, dj = synthetic_journal_corpus(
         n_terms=n, n_docs=m, n_journals=cfg.get("n_journals", 5))
-    u0 = init_u0(jax.random.PRNGKey(0), n, k)
+    model = EnforcedNMF(NMFConfig(
+        k=k, iters=iters, sparsity=sparsity, solver=args.solver,
+        tol=args.tol))
     t0 = time.time()
-    res = enforced_sparsity_nmf(a, u0, t_u=args.t_u, t_v=args.t_v, iters=iters)
-    jax.block_until_ready(res.u)
-    print(f"{iters} iterations in {time.time()-t0:.1f}s; "
-          f"final error {float(res.error[-1]):.4f}, "
-          f"residual {float(res.residual[-1]):.2e}, "
-          f"NNZ(U)={int(res.nnz_u[-1])}, NNZ(V)={int(res.nnz_v[-1])}, "
+    model.fit(a)
+    jax.block_until_ready(model.u_)
+    res = model.result_
+    stop = " (early stop)" if res.converged else ""
+    print(f"solver={args.solver}: {model.n_iter_} iterations{stop} in "
+          f"{time.time()-t0:.1f}s; "
+          f"final error {res.final_error:.4f}, "
+          f"residual {res.final_residual:.2e}, "
+          f"NNZ(U)={res.final_nnz_u}, NNZ(V)={res.final_nnz_v}, "
           f"max stored NNZ={int(res.max_nnz)}")
 
 

@@ -1,0 +1,25 @@
+"""Unified estimator front door for the paper's NMF solver family.
+
+One import surface over the four legacy entry points (``als_nmf``,
+``enforced_sparsity_nmf``, ``sequential_als_nmf``, ``dist_enforced_als``):
+
+    from repro.nmf import EnforcedNMF, NMFConfig, Sparsity
+
+    model = EnforcedNMF(NMFConfig(k=5, sparsity=Sparsity(t_u=55)))
+    model.fit(a)                  # dense jax.Array, SpCSR, or scipy sparse
+    v_new = model.transform(a2)   # fold-in: topic inference, U frozen
+    model.partial_fit(chunk)      # streaming mini-batches
+
+The legacy functions remain public and unchanged; the registered solvers
+are thin strategy wrappers over them.
+"""
+from repro.nmf.config import NMFConfig, Sparsity
+from repro.nmf.estimator import EnforcedNMF
+from repro.nmf.registry import available_solvers, get_solver, register_solver
+from repro.nmf.result import FitResult
+from repro.nmf import solvers as _solvers  # noqa: F401 — registers solvers
+
+__all__ = [
+    "EnforcedNMF", "NMFConfig", "Sparsity", "FitResult",
+    "register_solver", "get_solver", "available_solvers",
+]

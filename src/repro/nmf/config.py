@@ -1,0 +1,177 @@
+"""Estimator configuration: the ``Sparsity`` spec and ``NMFConfig``.
+
+These two frozen dataclasses replace the loose ``t_u``/``t_v``/``exact``/
+``columnwise`` keyword plumbing that every legacy entry point re-wired by
+hand.  A ``Sparsity`` describes *what* to enforce (budgets, absolute or as a
+fraction of the dense factor, globally or per column, via bisection or exact
+sort); an ``NMFConfig`` describes the whole run (rank, iterations, solver,
+dtype, early-stop tolerance) and is what :class:`repro.nmf.EnforcedNMF`
+consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk
+
+__all__ = ["Sparsity", "NMFConfig"]
+
+_MODES = ("global", "exact", "columnwise")
+
+
+@dataclasses.dataclass(frozen=True)
+class Sparsity:
+    """Top-t enforcement spec for the two factors (paper Alg. 2 / §4).
+
+    Exactly one of ``t_*`` / ``frac_*`` may be given per factor; both ``None``
+    leaves that factor dense (Alg. 1 behavior for that factor).
+
+    * ``t_u`` / ``t_v`` — absolute nonzero budgets.  In ``columnwise`` mode
+      the budget is per column; otherwise it is for the whole factor.
+    * ``frac_u`` / ``frac_v`` — budget as a fraction of the dense factor size
+      (``rows * k``), resolved against the actual shapes at fit time.  This is
+      how the paper's Fig. 3 sweeps are expressed (e.g. 2% of dense).
+    * ``mode`` — ``"global"`` (bisection threshold select, the scalable
+      default), ``"exact"`` (sort-based, the paper's MATLAB oracle), or
+      ``"columnwise"`` (per-column enforcement, paper §4).
+    * ``num_steps`` — bisection steps for ``"global"`` mode.
+    """
+
+    t_u: Optional[int] = None
+    t_v: Optional[int] = None
+    frac_u: Optional[float] = None
+    frac_v: Optional[float] = None
+    mode: str = "global"
+    num_steps: int = 40
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got {self.mode!r}")
+        if self.t_u is not None and self.frac_u is not None:
+            raise ValueError("give at most one of t_u / frac_u")
+        if self.t_v is not None and self.frac_v is not None:
+            raise ValueError("give at most one of t_v / frac_v")
+        for name in ("frac_u", "frac_v"):
+            f = getattr(self, name)
+            if f is not None and not (0.0 < f <= 1.0):
+                raise ValueError(f"{name} must be in (0, 1], got {f}")
+
+    @property
+    def is_dense(self) -> bool:
+        """True when no enforcement is requested on either factor."""
+        return (self.t_u is None and self.t_v is None
+                and self.frac_u is None and self.frac_v is None)
+
+    def resolve(self, rows: int, k: int, which: str) -> Optional[int]:
+        """Absolute budget for one factor (``which`` in ``{"u", "v"}``) given
+        its shape ``(rows, k)``; ``None`` means leave dense."""
+        t = self.t_u if which == "u" else self.t_v
+        frac = self.frac_u if which == "u" else self.frac_v
+        if t is None and frac is None:
+            return None
+        if t is None:
+            dense = rows if self.mode == "columnwise" else rows * k
+            t = max(int(dense * frac), 1)
+        cap = rows if self.mode == "columnwise" else rows * k
+        return min(int(t), cap)
+
+    def sparsifier(self, rows: int, k: int, which: str
+                   ) -> Optional[Callable[[jax.Array], jax.Array]]:
+        """Hashable callable enforcing this spec on a ``(rows, k)`` factor,
+        suitable for the jit-static ``sparsify_*`` arguments of the ALS
+        engine; ``None`` for no enforcement."""
+        t = self.resolve(rows, k, which)
+        if t is None:
+            return None
+        if self.mode == "columnwise":
+            return functools.partial(topk.topk_project_columns, t_per_col=t)
+        if self.mode == "exact":
+            return functools.partial(topk.topk_project_exact, t=t)
+        return functools.partial(topk.topk_project_bisect, t=t,
+                                 num_steps=self.num_steps)
+
+    def apply(self, x: jax.Array, which: str) -> jax.Array:
+        """Enforce this spec on a concrete factor matrix (used by
+        ``transform`` / ``partial_fit`` outside the jitted engine)."""
+        fn = self.sparsifier(x.shape[0], x.shape[1], which)
+        return x if fn is None else fn(x)
+
+    @classmethod
+    def parse(cls, spec: Optional[str]) -> "Sparsity":
+        """Build from a CLI string like ``"t_u=5000,t_v=2000,mode=exact"`` or
+        ``"frac_u=0.02"``.  Empty/None gives the dense (no-op) spec."""
+        if not spec:
+            return cls()
+        kw = {}
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                raise ValueError(f"bad --sparsity entry {part!r}; "
+                                 "expected key=value")
+            key, val = (s.strip() for s in part.split("=", 1))
+            if key in ("t_u", "t_v", "num_steps"):
+                kw[key] = int(val)
+            elif key in ("frac_u", "frac_v"):
+                kw[key] = float(val)
+            elif key == "mode":
+                kw[key] = val
+            else:
+                raise ValueError(f"unknown Sparsity field {key!r}")
+        return cls(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class NMFConfig:
+    """One factorization run: ``A (n x m) ~= U (n x k) @ V (m x k)^T``.
+
+    * ``k`` — rank / number of topics.
+    * ``iters`` — iteration budget.  For the ``"sequential"`` solver this is
+      the per-block inner-iteration budget (paper Alg. 3).
+    * ``sparsity`` — a :class:`Sparsity` spec; the default enforces nothing.
+    * ``solver`` — registry name: ``"als"``, ``"enforced"``, ``"sequential"``,
+      or ``"distributed"`` (see :mod:`repro.nmf.registry`).
+    * ``dtype`` — factor dtype name (numpy/scipy inputs are cast to this;
+      jax/SpCSR inputs are taken as-is so legacy results match bit-for-bit).
+    * ``tol`` — early-stop tolerance on the relative residual
+      ``||U_i - U_{i-1}||_F / ||U_i||_F``; 0 disables early stopping.
+    * ``seed`` — PRNG seed for the default initial guess.
+    * ``block_size`` — topic-block width for the ``"sequential"`` solver
+      (must divide ``k``; width 1 is the paper's Fig. 9 fast path).
+    * ``mesh_shape`` — ``(rows, cols)`` device grid for the ``"distributed"``
+      solver; the default runs on a 1x1 mesh (single device).
+    """
+
+    k: int = 5
+    iters: int = 75
+    sparsity: Sparsity = dataclasses.field(default_factory=Sparsity)
+    solver: str = "enforced"
+    dtype: str = "float32"
+    tol: float = 0.0
+    seed: int = 0
+    track_error: bool = True
+    block_size: int = 1
+    mesh_shape: Tuple[int, int] = (1, 1)
+
+    def __post_init__(self):
+        if self.k <= 0:
+            raise ValueError(f"k must be positive, got {self.k}")
+        if self.iters <= 0:
+            raise ValueError(f"iters must be positive, got {self.iters}")
+        if self.solver == "sequential" and self.k % self.block_size:
+            raise ValueError(
+                f"block_size ({self.block_size}) must divide k ({self.k})")
+        jnp.dtype(self.dtype)  # fail fast on bad dtype names
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def replace(self, **changes) -> "NMFConfig":
+        return dataclasses.replace(self, **changes)

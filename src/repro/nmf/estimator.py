@@ -1,0 +1,227 @@
+"""``EnforcedNMF`` — the single estimator front door.
+
+scikit-learn's ``NMF`` shape (``fit`` / ``fit_transform`` / ``transform``)
+plus gensim's streaming ``partial_fit``, over the paper's solver family:
+
+    A (n_terms x m_docs)  ~=  U (n_terms x k) @ V (m_docs x k)^T
+
+``U`` holds the term-topic factors ("components"), ``V`` the document-topic
+loadings.  ``fit`` dispatches through the solver registry; ``transform``
+folds unseen documents into a fitted topic space with ``U`` frozen (one
+enforced-sparsity least-squares pass — topic inference for new documents);
+``partial_fit`` streams document mini-batches through online ALS with
+accumulated sufficient statistics, gensim-style.
+
+Inputs may be dense ``jax.Array`` / numpy arrays, padded-CSR ``SpCSR``, or
+scipy sparse matrices (term-document matrices from sklearn/gensim
+vectorizers — converted via :func:`repro.sparse.from_scipy`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nmf import Matrix, _matmul, _matmul_t, init_u0, solve_gram
+from repro.core import metrics as M
+from repro.nmf.config import NMFConfig, Sparsity
+from repro.nmf.registry import get_solver
+from repro.nmf.result import FitResult
+from repro.sparse.csr import SpCSR
+
+__all__ = ["EnforcedNMF"]
+
+ArrayLike = Union[jax.Array, np.ndarray, SpCSR]
+
+
+class EnforcedNMF:
+    """Estimator over the enforced-sparse NMF solver family.
+
+    >>> model = EnforcedNMF(NMFConfig(k=5, sparsity=Sparsity(t_u=55)))
+    >>> model.fit(a)                       # a: (n_terms, m_docs)
+    >>> v_new = model.transform(a_held_out)  # fold-in, U frozen
+
+    Keyword overrides are applied on top of the given config, so
+    ``EnforcedNMF(k=10, solver="sequential")`` works without building an
+    ``NMFConfig`` by hand.
+
+    Fitted attributes: ``u_`` (n, k), ``v_`` (m, k), ``result_``
+    (:class:`FitResult` history), ``n_iter_``, ``n_features_`` (term count),
+    ``n_docs_seen_``.
+    """
+
+    def __init__(self, config: Optional[NMFConfig] = None, **overrides):
+        if config is None:
+            config = NMFConfig()
+        if overrides:
+            config = dataclasses.replace(config, **overrides)
+        self.config = config
+        self.u_: Optional[jax.Array] = None
+        self.v_: Optional[jax.Array] = None
+        self.result_: Optional[FitResult] = None
+        self.n_iter_: int = 0
+        self.n_features_: Optional[int] = None
+        self.n_docs_seen_: int = 0
+        # reference document count for scaling absolute t_v budgets in
+        # transform, and online-ALS sufficient statistics for partial_fit
+        self._m_ref: Optional[int] = None
+        self._av_acc: Optional[jax.Array] = None   # sum A_c V_c   (n, k)
+        self._gv_acc: Optional[jax.Array] = None   # sum V_c^T V_c (k, k)
+
+    # -- input coercion ------------------------------------------------------
+
+    def _coerce(self, a: ArrayLike) -> Matrix:
+        """Accept jax/numpy dense, SpCSR, or scipy sparse.  jax arrays and
+        SpCSR pass through untouched (bit-for-bit with the legacy entry
+        points); numpy/scipy are cast to ``config.dtype``."""
+        if isinstance(a, (SpCSR, jax.Array)):
+            return a
+        if hasattr(a, "tocoo"):  # scipy sparse, without a hard scipy import
+            from repro.sparse.csr import from_scipy
+
+            sp = from_scipy(a)
+            return SpCSR(sp.values.astype(self.config.jnp_dtype), sp.cols,
+                         sp.shape)
+        return jnp.asarray(a, dtype=self.config.jnp_dtype)
+
+    def _check_fitted(self):
+        if self.u_ is None:
+            raise RuntimeError(
+                "this EnforcedNMF instance is not fitted yet; "
+                "call fit or partial_fit first")
+
+    def _check_features(self, a: Matrix):
+        if self.n_features_ is not None and a.shape[0] != self.n_features_:
+            raise ValueError(
+                f"input has {a.shape[0]} terms, the fitted model has "
+                f"{self.n_features_}")
+
+    # -- fitting -------------------------------------------------------------
+
+    def fit(self, a: ArrayLike, u0: Optional[jax.Array] = None) -> "EnforcedNMF":
+        """Factorize ``a`` with the configured solver.  ``u0`` overrides the
+        seeded default initial guess (shape (n, k); the sequential solver
+        also accepts the (n, block_size) block shape)."""
+        cfg = self.config
+        a = self._coerce(a)
+        n, m = a.shape
+        entry = get_solver(cfg.solver)
+        if u0 is None:
+            u0 = init_u0(jax.random.PRNGKey(cfg.seed), n,
+                         entry.u0_cols(cfg)).astype(cfg.jnp_dtype)
+        result = entry.fn(a, cfg, u0)
+        self.u_, self.v_, self.result_ = result.u, result.v, result
+        self.n_iter_ = result.n_iter
+        self.n_features_ = n
+        self.n_docs_seen_ = m  # fit is from-scratch; only partial_fit accumulates
+        self._m_ref = m
+        # seed streaming statistics so partial_fit continues from this fit;
+        # one extra spmm (~1/(2*iters) of the fit) beats pinning the corpus
+        self._gv_acc = self.v_.T @ self.v_
+        self._av_acc = _matmul(a, self.v_)
+        return self
+
+    def fit_transform(self, a: ArrayLike,
+                      u0: Optional[jax.Array] = None) -> jax.Array:
+        """Fit and return the document-topic loadings ``V`` (m, k)."""
+        return self.fit(a, u0=u0).v_
+
+    # -- fold-in -------------------------------------------------------------
+
+    def transform(self, a_new: ArrayLike) -> jax.Array:
+        """Fold unseen documents into the fitted topic space: one
+        enforced-sparsity least-squares pass for ``V_new`` with ``U`` frozen,
+
+            V_new = top-t( relu( A_new^T U (U^T U)^{-1} ) )
+
+        Returns non-negative (m_new, k) loadings.  Absolute whole-factor
+        ``t_v`` budgets are rescaled by ``m_new / m_train`` so the per-
+        document sparsity matches training; per-column and fractional
+        budgets resolve against the batch naturally.
+        """
+        self._check_fitted()
+        a_new = self._coerce(a_new)
+        self._check_features(a_new)
+        u = self.u_
+        v = solve_gram(u.T @ u, _matmul_t(a_new, u))
+        return self._enforce_v(jnp.maximum(v, 0.0))
+
+    def _enforce_v(self, v: jax.Array) -> jax.Array:
+        sp = self.config.sparsity
+        if (sp.t_v is not None and sp.mode != "columnwise"
+                and self._m_ref):
+            t = max(1, round(sp.t_v * v.shape[0] / self._m_ref))
+            sp = dataclasses.replace(sp, t_v=t)
+        return sp.apply(v, "v")
+
+    # -- streaming -----------------------------------------------------------
+
+    def partial_fit(self, a_chunk: ArrayLike, iters: Optional[int] = None,
+                    forget: float = 1.0) -> "EnforcedNMF":
+        """Online ALS over one document mini-batch (n_terms, m_chunk).
+
+        Keeps running sufficient statistics ``sum A_c V_c`` and
+        ``sum V_c^T V_c`` over all chunks seen, so the ``U`` update uses the
+        whole stream, not just the newest batch (gensim-style online NMF);
+        ``forget`` < 1 exponentially decays old chunks.  ``iters`` defaults
+        to ``min(config.iters, 10)`` inner passes per batch.  ``t_v`` budgets
+        apply per chunk; ``t_u`` to the full factor.
+        """
+        if not 0.0 < forget <= 1.0:
+            raise ValueError(f"forget must be in (0, 1], got {forget}")
+        cfg = self.config
+        a_chunk = self._coerce(a_chunk)
+        self._check_features(a_chunk)
+        n, mc = a_chunk.shape
+        if self.u_ is None:
+            self.u_ = init_u0(jax.random.PRNGKey(cfg.seed), n,
+                              cfg.k).astype(cfg.jnp_dtype)
+            self.n_features_ = n
+        if self._gv_acc is None:
+            self._gv_acc = jnp.zeros((cfg.k, cfg.k), self.u_.dtype)
+            self._av_acc = jnp.zeros((n, cfg.k), self.u_.dtype)
+
+        sp = cfg.sparsity
+        n_inner = iters if iters is not None else min(cfg.iters, 10)
+        u, v = self.u_, None
+        gv = av = None
+        for _ in range(max(n_inner, 1)):
+            v = solve_gram(u.T @ u, _matmul_t(a_chunk, u))
+            v = sp.apply(jnp.maximum(v, 0.0), "v")
+            gv = forget * self._gv_acc + v.T @ v
+            av = forget * self._av_acc + _matmul(a_chunk, v)
+            u = solve_gram(gv, av)
+            u = sp.apply(jnp.maximum(u, 0.0), "u")
+
+        # the last inner pass already folded this chunk's statistics into
+        # gv/av; committing them avoids recomputing the chunk matmul
+        self._gv_acc, self._av_acc = gv, av
+        self.u_, self.v_ = u, v
+        self.n_docs_seen_ += mc
+        if self._m_ref is None:
+            self._m_ref = mc
+        return self
+
+    # -- evaluation ----------------------------------------------------------
+
+    def score(self, a: ArrayLike, v: Optional[jax.Array] = None) -> float:
+        """Relative reconstruction error ``||A - U V^T||_F / ||A||_F`` of the
+        fitted factors on ``a`` (lower is better).  ``v`` defaults to a
+        fold-in ``transform`` of ``a``."""
+        self._check_fitted()
+        a = self._coerce(a)
+        self._check_features(a)
+        if v is None:
+            if self.v_ is not None and self.v_.shape[0] == a.shape[1]:
+                v = self.v_
+            else:
+                v = self.transform(a)
+        if isinstance(a, SpCSR):
+            rows = jnp.broadcast_to(jnp.arange(a.n)[:, None], a.cols.shape)
+            return float(M.relative_error_sparse(
+                a.values.ravel(), rows.ravel(), a.cols.ravel(),
+                a.sqnorm(), self.u_, v))
+        return float(M.relative_error(a, self.u_, v))

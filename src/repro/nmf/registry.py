@@ -1,0 +1,57 @@
+"""Solver registry: strategy pattern over the paper's algorithm family.
+
+A solver is a callable ``(a, config, u0) -> FitResult`` where ``a`` is a
+dense ``jax.Array`` or a padded-CSR :class:`repro.sparse.SpCSR` (every solver
+must handle both — the legacy engines already dispatch internally).  Solvers
+self-register at import time via :func:`register_solver`; the estimator looks
+them up by the ``NMFConfig.solver`` name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    import jax
+    from repro.nmf.config import NMFConfig
+    from repro.nmf.result import FitResult
+
+SolverFn = Callable[..., "FitResult"]
+
+__all__ = ["register_solver", "get_solver", "available_solvers", "SolverEntry"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverEntry:
+    name: str
+    fn: SolverFn
+    #: columns the default initial guess U0 needs for this solver — the
+    #: sequential solver converges one (n, block_size) block at a time.
+    u0_cols: Callable[["NMFConfig"], int]
+
+
+_REGISTRY: Dict[str, SolverEntry] = {}
+
+
+def register_solver(name: str, *, u0_cols: Callable[["NMFConfig"], int] = None):
+    """Class-of-algorithms decorator: ``@register_solver("als")``."""
+    cols = u0_cols if u0_cols is not None else (lambda cfg: cfg.k)
+
+    def deco(fn: SolverFn) -> SolverFn:
+        _REGISTRY[name] = SolverEntry(name=name, fn=fn, u0_cols=cols)
+        return fn
+
+    return deco
+
+
+def get_solver(name: str) -> SolverEntry:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver {name!r}; available: {available_solvers()}"
+        ) from None
+
+
+def available_solvers() -> List[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,145 @@
+"""Registered solver strategies wrapping the legacy engines.
+
+Every solver maps ``(a, config, u0) -> FitResult`` and accepts both dense
+``jax.Array`` and padded-CSR ``SpCSR`` inputs (the legacy engines dispatch on
+the type internally).  The legacy front doors — ``als_nmf``,
+``enforced_sparsity_nmf``, ``sequential_als_nmf``, ``dist_enforced_als`` —
+stay public and unchanged; these wrappers only translate the unified
+``NMFConfig`` onto them.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nmf import Matrix, als_nmf
+from repro.core.sequential import sequential_als_nmf
+from repro.nmf.config import NMFConfig
+from repro.nmf.registry import register_solver
+from repro.nmf.result import FitResult
+from repro.sparse.csr import SpCSR, to_dense
+
+__all__ = ["solve_als", "solve_enforced", "solve_sequential",
+           "solve_distributed"]
+
+#: iteration chunk used when an early-stop tolerance is active — small enough
+#: to stop promptly, large enough that at most two distinct scan lengths are
+#: compiled per run.
+_TOL_CHUNK = 10
+
+
+def _als_family(a: Matrix, config: NMFConfig, u0: jax.Array,
+                solver_name: str) -> FitResult:
+    n, m = a.shape
+    sp_u = config.sparsity.sparsifier(n, config.k, "u")
+    sp_v = config.sparsity.sparsifier(m, config.k, "v")
+
+    def run(u_init, iters):
+        return als_nmf(a, u_init, iters=iters, sparsify_u=sp_u,
+                       sparsify_v=sp_v, track_error=config.track_error)
+
+    if config.tol <= 0.0:
+        return FitResult.from_nmf_result(run(u0, config.iters), solver_name)
+
+    # Early stop: run in compiled chunks, checking the relative residual on
+    # the host between chunks.  The engine recomputes V from U at the top of
+    # every iteration, so restarting a chunk from the previous chunk's U is
+    # exactly equivalent to one long run.
+    parts, u, done, converged = [], u0, 0, False
+    while done < config.iters:
+        step = min(_TOL_CHUNK, config.iters - done)
+        res = run(u, step)
+        parts.append(FitResult.from_nmf_result(res, solver_name))
+        u, done = res.u, done + step
+        if float(res.residual[-1]) <= config.tol:
+            converged = True
+            break
+    return FitResult.concatenate(parts, converged=converged)
+
+
+@register_solver("als")
+def solve_als(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
+    """Projected ALS (paper Alg. 1).  With a non-trivial ``Sparsity`` spec
+    this is identical to ``"enforced"`` — Alg. 1 is Alg. 2 with identity
+    sparsifiers, and the two share one engine."""
+    return _als_family(a, config, u0, "als")
+
+
+@register_solver("enforced")
+def solve_enforced(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
+    """Enforced-sparsity ALS (paper Alg. 2): top-t projection of U and/or V
+    inside every iteration, per ``config.sparsity``."""
+    return _als_family(a, config, u0, "enforced")
+
+
+@register_solver("sequential", u0_cols=lambda cfg: cfg.block_size)
+def solve_sequential(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
+    """Sequential ALS (paper Alg. 3): topics converge one ``block_size``-wide
+    block at a time; ``config.iters`` is the per-block budget.
+
+    ``t_u`` / ``t_v`` budgets apply per block (the Alg. 3 semantics); the
+    legacy engine enforces them via bisection regardless of ``sparsity.mode``.
+    Early-stop ``tol`` is ignored — blocks run their fixed budget.
+    """
+    k2 = config.block_size
+    blocks = config.k // k2
+    if u0.shape[1] == config.k and k2 != config.k:
+        u0 = u0[:, :k2]
+    if u0.shape[1] != k2:
+        raise ValueError(
+            f"sequential solver needs u0 with {k2} (block_size) or "
+            f"{config.k} (k) columns, got {u0.shape[1]}")
+    n, m = a.shape
+    res = sequential_als_nmf(
+        a, u0, k2=k2, blocks=blocks, iters=config.iters,
+        t_u=config.sparsity.resolve(n, k2, "u"),
+        t_v=config.sparsity.resolve(m, k2, "v"),
+        track_error=config.track_error,
+    )
+    return FitResult.from_sequential_result(res)
+
+
+@register_solver("distributed")
+def solve_distributed(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
+    """Distributed enforced ALS (DESIGN.md §4) on a ``config.mesh_shape``
+    device grid.  The default 1x1 mesh runs anywhere (CPU included) through
+    the same shard_map code path the pod dry-run lowers; larger meshes need
+    ``rows * cols`` visible devices and shapes divisible by the grid.
+
+    Input is densified host-side to build the 2-D-sharded ``DistCSR`` (the
+    test/driver ingest path); production-scale ingest builds shards directly
+    — see ``launch/nmf_run.py``'s dry-run cell.
+    """
+    from repro.core.distributed import dist_enforced_als, distribute_csr
+
+    r, c = config.mesh_shape
+    n, m = a.shape
+    if n % r or m % c:
+        raise ValueError(
+            f"matrix shape {(n, m)} must be divisible by mesh_shape {(r, c)}")
+    devices = jax.devices()
+    if len(devices) < r * c:
+        raise ValueError(
+            f"mesh_shape {(r, c)} needs {r * c} devices, "
+            f"have {len(devices)}")
+    mesh = jax.sharding.Mesh(
+        np.asarray(devices[: r * c]).reshape(r, c), ("data", "model"))
+
+    a_np = np.asarray(to_dense(a) if isinstance(a, SpCSR) else a)
+    dist = distribute_csr(a_np, r, c)
+    run = dist_enforced_als(
+        mesh, ("data",), "model",
+        t_u=config.sparsity.resolve(n, config.k, "u"),
+        t_v=config.sparsity.resolve(m, config.k, "v"),
+        iters=config.iters, track_error=config.track_error,
+    )
+    v0 = jnp.zeros((m, config.k), dtype=u0.dtype)
+    u, v, rs, es = run(dist, u0, v0)
+    nnz = jnp.sum(u != 0) + jnp.sum(v != 0)
+    return FitResult(
+        u=u, v=v, residual=rs, error=es, max_nnz=nnz,
+        solver="distributed", n_iter=int(rs.shape[0]),
+    )

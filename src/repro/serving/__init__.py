@@ -1,3 +1,4 @@
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.topics import TopicRequest, TopicServer
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "TopicRequest", "TopicServer"]

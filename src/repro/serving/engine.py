@@ -109,11 +109,17 @@ class ServingEngine:
         for _ in range(max_ticks):
             if not self.queue and all(s is None for s in self.slots):
                 break
-            before = {s.rid for s in self.slots if s}
+            # snapshot queued requests too: step() admits before decoding, so
+            # a request can be admitted and finish within the same tick
+            before = {s.rid: s for s in self.slots if s}
+            for req in self.queue:
+                before.setdefault(req.rid, req)
             self.step()
             after = {s.rid for s in self.slots if s}
-            # requests that left their slot this tick are finished
-            for req_id in before - after:
-                if req_id not in seen:
+            after |= {r.rid for r in self.queue}
+            # requests that left the engine this tick are finished
+            for req_id, req in before.items():
+                if req_id not in after and req_id not in seen:
                     seen.add(req_id)
+                    done.append(req)
         return done

@@ -1,0 +1,95 @@
+"""Topic-inference serving endpoint over a fitted :class:`EnforcedNMF`.
+
+The NMF analogue of the LM ``ServingEngine``: requests carry a bag-of-words
+document (sparse ``(term_id, weight)`` pairs); the server micro-batches them
+into one padded-CSR matrix per tick and folds the whole batch into the fitted
+topic space with a single frozen-``U`` ``transform`` pass — so serving cost
+per tick is one (k x k) solve plus one sparse matmul regardless of how many
+documents share the batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.csr import from_coo
+
+__all__ = ["TopicRequest", "TopicServer"]
+
+
+@dataclasses.dataclass
+class TopicRequest:
+    rid: int
+    #: sparse bag-of-words: (term_id, weight) pairs
+    terms: Sequence[Tuple[int, float]]
+    #: how many top topics to return
+    top: int = 3
+    #: result — [(topic_id, loading), ...], strongest first
+    topics: Optional[List[Tuple[int, float]]] = None
+
+
+class TopicServer:
+    """Micro-batching fold-in server.
+
+    >>> server = TopicServer(fitted_model, max_batch=32)
+    >>> server.submit(TopicRequest(rid=0, terms=[(12, 2.0), (80, 1.0)]))
+    >>> results = server.run_until_drained()
+    """
+
+    def __init__(self, estimator, max_batch: int = 32):
+        if getattr(estimator, "u_", None) is None:
+            raise ValueError("TopicServer needs a fitted EnforcedNMF")
+        self.estimator = estimator
+        self.max_batch = max_batch
+        self.n_terms = estimator.n_features_
+        self.queue: List[TopicRequest] = []
+        self.served = 0
+
+    def submit(self, req: TopicRequest):
+        self.queue.append(req)
+
+    def step(self) -> Dict[int, List[Tuple[int, float]]]:
+        """Serve one micro-batch; returns ``{rid: [(topic, loading), ...]}``."""
+        if not self.queue:
+            return {}
+        batch, self.queue = self.queue[: self.max_batch], self.queue[self.max_batch:]
+        rows, cols, vals = [], [], []
+        for doc, req in enumerate(batch):
+            for term, weight in req.terms:
+                if 0 <= term < self.n_terms:
+                    rows.append(term)
+                    cols.append(doc)
+                    vals.append(float(weight))
+        a_new = from_coo(
+            np.asarray(rows, np.int64), np.asarray(cols, np.int64),
+            np.asarray(vals, np.float32), (self.n_terms, len(batch)),
+        )
+        v = self.estimator.transform(a_new)          # (batch, k)
+        order = np.asarray(jnp.argsort(-v, axis=1))
+        v_np = np.asarray(v)
+        out = {}
+        for doc, req in enumerate(batch):
+            picks = [
+                (int(t), float(v_np[doc, t]))
+                for t in order[doc, : req.top]
+                if v_np[doc, t] > 0
+            ]
+            req.topics = picks
+            out[req.rid] = picks
+        self.served += len(batch)
+        return out
+
+    def run_until_drained(self, max_ticks: int = 1000) -> List[TopicRequest]:
+        done: List[TopicRequest] = []
+        for _ in range(max_ticks):
+            if not self.queue:
+                break
+            n_before = len(self.queue)
+            batch = self.queue[: self.max_batch]
+            self.step()
+            done.extend(batch)
+            assert len(self.queue) < n_before  # step always drains
+        return done

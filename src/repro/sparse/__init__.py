@@ -1,4 +1,9 @@
 """Static-capacity sparse matrix substrate (TPU-friendly padded CSR)."""
-from repro.sparse.csr import SpCSR, from_dense, to_dense, spmm, spmm_t, from_coo
+from repro.sparse.csr import (
+    SpCSR, from_dense, to_dense, spmm, spmm_t, from_coo, from_scipy, to_scipy,
+)
 
-__all__ = ["SpCSR", "from_dense", "to_dense", "spmm", "spmm_t", "from_coo"]
+__all__ = [
+    "SpCSR", "from_dense", "to_dense", "spmm", "spmm_t", "from_coo",
+    "from_scipy", "to_scipy",
+]

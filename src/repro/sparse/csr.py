@@ -90,6 +90,47 @@ def from_coo(rows, cols, vals, shape: Tuple[int, int], cap: int | None = None) -
     return SpCSR(jnp.asarray(values), jnp.asarray(colidx), (n, m))
 
 
+def from_scipy(sp_matrix, cap: int | None = None) -> SpCSR:
+    """Build from any scipy.sparse matrix (the term-document matrices that
+    sklearn/gensim vectorizers emit).  ``cap`` bounds the per-row slot count;
+    rows with more stored nonzeros keep their first ``cap`` in column order
+    (pass a larger ``cap`` or pre-prune if that matters).  Values are kept in
+    the input dtype; explicit zeros are dropped."""
+    import scipy.sparse as sps
+
+    csr = sps.csr_matrix(sp_matrix)
+    csr.sum_duplicates()
+    csr.eliminate_zeros()
+    n, m = csr.shape
+    counts = np.diff(csr.indptr)
+    if cap is None:
+        cap = max(int(counts.max(initial=1)), 1)
+    # slot index of each stored element within its row, vectorized
+    row_ids = np.repeat(np.arange(n), counts)
+    slots = np.arange(csr.nnz) - np.repeat(csr.indptr[:-1], counts)
+    keep = slots < cap
+    values = np.zeros((n, cap), dtype=csr.data.dtype)
+    colidx = np.zeros((n, cap), dtype=np.int32)
+    values[row_ids[keep], slots[keep]] = csr.data[keep]
+    colidx[row_ids[keep], slots[keep]] = csr.indices[keep]
+    return SpCSR(jnp.asarray(values), jnp.asarray(colidx), (n, m))
+
+
+def to_scipy(a: SpCSR):
+    """Round-trip back to ``scipy.sparse.csr_matrix`` (duplicate slots, if
+    any, are summed — matching :func:`to_dense`)."""
+    import scipy.sparse as sps
+
+    values = np.asarray(a.values)
+    cols = np.asarray(a.cols)
+    mask = values != 0
+    rows = np.broadcast_to(np.arange(a.n)[:, None], cols.shape)
+    coo = sps.coo_matrix(
+        (values[mask], (rows[mask], cols[mask])), shape=a.shape
+    )
+    return coo.tocsr()
+
+
 def to_dense(a: SpCSR) -> jax.Array:
     out = jnp.zeros(a.shape, dtype=a.values.dtype)
     rows = jnp.broadcast_to(jnp.arange(a.n)[:, None], a.cols.shape)

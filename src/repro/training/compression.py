@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import SHARD_MAP_NO_CHECK, shard_map as _shard_map
 from repro.core.topk import topk_project_bisect
 
 Params = Any
@@ -84,9 +85,9 @@ def make_compressed_grad_fn(
             jax.tree.map(lambda _: P(), params),
             jax.tree.map(lambda l: P(data_axes, *([None] * (l.ndim - 1))), err_state),
         )
-        fn = jax.shard_map(
+        fn = _shard_map(
             local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
+            **SHARD_MAP_NO_CHECK,
         )
         return fn(params, batch, err_state)
 

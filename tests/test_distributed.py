@@ -30,6 +30,7 @@ def test_dist_als_matches_single_device():
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np, json
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import set_mesh
         from repro.core.distributed import distribute_csr, dist_enforced_als, DistCSR
         from repro.core import init_u0, enforced_sparsity_nmf
         from repro.data import synthetic_journal_corpus
@@ -40,7 +41,7 @@ def test_dist_als_matches_single_device():
         dist = distribute_csr(a, 4, 2)
         u0 = np.asarray(init_u0(jax.random.PRNGKey(2), 256, 5))
         v0 = np.zeros((128, 5), np.float32)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             run = dist_enforced_als(mesh, ("data",), "model", t_u=55, t_v=300, iters=20)
             sh = NamedSharding(mesh, P(("data",), "model", None, None))
             args = [jax.device_put(x, sh) for x in
@@ -67,6 +68,7 @@ def test_dist_als_multipod_axes():
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np, json
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import set_mesh
         from repro.core.distributed import distribute_csr, dist_enforced_als, DistCSR
         from repro.core import init_u0
         from repro.data import synthetic_journal_corpus
@@ -77,7 +79,7 @@ def test_dist_als_multipod_axes():
         dist = distribute_csr(a, 4, 2)
         u0 = np.asarray(init_u0(jax.random.PRNGKey(2), 128, 4))
         v0 = np.zeros((64, 4), np.float32)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             run = dist_enforced_als(mesh, ("pod", "data"), "model",
                                     t_u=40, t_v=100, iters=10)
             sh = NamedSharding(mesh, P(("pod", "data"), "model", None, None))
@@ -99,6 +101,7 @@ def test_compressed_grads_error_feedback():
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np, json
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import set_mesh
         from repro.training.compression import make_compressed_grad_fn, init_error_state
         mesh = jax.make_mesh((4,), ("data",))
         def loss_fn(params, batch):
@@ -107,7 +110,7 @@ def test_compressed_grads_error_feedback():
         params = {"w": jnp.asarray(np.random.default_rng(0).standard_normal((8, 4)), jnp.float32)}
         batch = {"x": jnp.asarray(np.random.default_rng(1).standard_normal((16, 8)), jnp.float32),
                  "y": jnp.asarray(np.random.default_rng(2).standard_normal((16, 4)), jnp.float32)}
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             gf = make_compressed_grad_fn(loss_fn, mesh, ("data",), density=0.25)
             err = init_error_state(params, 4)
             loss, g, err2 = gf(params, batch, err)
@@ -127,6 +130,7 @@ def test_compressed_grads_error_feedback():
 
 def test_single_device_shard_map_paths():
     """dist ALS code path also runs on a 1x1 mesh in-process."""
+    from repro.compat import set_mesh
     from repro.core.distributed import distribute_csr, dist_enforced_als, DistCSR
     from repro.core import init_u0
     from repro.data import synthetic_journal_corpus
@@ -137,7 +141,7 @@ def test_single_device_shard_map_paths():
     dist = distribute_csr(a, 1, 1)
     u0 = init_u0(jax.random.PRNGKey(0), 64, 4)
     v0 = jnp.zeros((32, 4), jnp.float32)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         run = dist_enforced_als(mesh, ("data",), "model", t_u=30, iters=8)
         u, v, rs, es = run(dist, u0, v0)
     assert jnp.isfinite(es[-1])

@@ -1,0 +1,284 @@
+"""Unified estimator front door: solver agreement with the legacy entry
+points, fold-in ``transform``, streaming ``partial_fit``, the sparsity spec,
+scipy interop, and the topic-serving endpoint."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    als_nmf, enforced_sparsity_nmf, sequential_als_nmf, init_u0,
+)
+from repro.data import synthetic_journal_corpus
+from repro.nmf import (
+    EnforcedNMF, FitResult, NMFConfig, Sparsity, available_solvers,
+    get_solver,
+)
+from repro.sparse import SpCSR, to_dense
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    a_sp, dj = synthetic_journal_corpus(n_terms=300, n_docs=200,
+                                        n_journals=5, seed=1)
+    return a_sp, to_dense(a_sp), dj
+
+
+@pytest.fixture(scope="module")
+def u0(small_problem):
+    _, a, _ = small_problem
+    return init_u0(jax.random.PRNGKey(2), a.shape[0], 5)
+
+
+# ---------------------------------------------------------------------------
+# Solver agreement with the legacy entry points
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_all_solvers():
+    assert {"als", "enforced", "sequential", "distributed"} <= set(
+        available_solvers())
+    with pytest.raises(ValueError, match="unknown solver"):
+        get_solver("nope")
+
+
+def test_als_matches_legacy_bitexact(small_problem, u0):
+    """EnforcedNMF(solver="als") with no sparsity == legacy als_nmf."""
+    _, a, _ = small_problem
+    legacy = als_nmf(a, u0, iters=12)
+    model = EnforcedNMF(NMFConfig(k=5, iters=12, solver="als")).fit(a, u0=u0)
+    np.testing.assert_array_equal(np.asarray(legacy.u), np.asarray(model.u_))
+    np.testing.assert_array_equal(np.asarray(legacy.v), np.asarray(model.v_))
+    np.testing.assert_array_equal(np.asarray(legacy.error),
+                                  np.asarray(model.result_.error))
+
+
+def test_enforced_matches_legacy_bitexact(small_problem, u0):
+    _, a, _ = small_problem
+    legacy = enforced_sparsity_nmf(a, u0, t_u=55, iters=12)
+    model = EnforcedNMF(NMFConfig(k=5, iters=12, solver="enforced",
+                                  sparsity=Sparsity(t_u=55))).fit(a, u0=u0)
+    np.testing.assert_array_equal(np.asarray(legacy.u), np.asarray(model.u_))
+    np.testing.assert_array_equal(np.asarray(legacy.v), np.asarray(model.v_))
+
+
+def test_sequential_matches_legacy_bitexact(small_problem):
+    _, a, _ = small_problem
+    u0b = init_u0(jax.random.PRNGKey(3), a.shape[0], 1)
+    legacy = sequential_als_nmf(a, u0b, k2=1, blocks=5, iters=8,
+                                t_u=50, t_v=150)
+    model = EnforcedNMF(NMFConfig(
+        k=5, iters=8, solver="sequential",
+        sparsity=Sparsity(t_u=50, t_v=150))).fit(a, u0=u0b)
+    np.testing.assert_array_equal(np.asarray(legacy.u), np.asarray(model.u_))
+    assert model.result_.error_granularity == "block"
+    assert model.result_.n_iter == 5 * 8  # flattened per-block residuals
+
+
+@pytest.mark.parametrize("solver", ["als", "enforced", "sequential"])
+def test_acceptance_matrix_dense_and_sparse(small_problem, solver):
+    """The acceptance grid: every solver fits both dense and SpCSR input."""
+    a_sp, a, _ = small_problem
+    cfg = NMFConfig(k=5, iters=6, solver=solver, sparsity=Sparsity(t_u=55))
+    for mat in (a, a_sp):
+        model = EnforcedNMF(cfg).fit(mat)
+        assert model.u_.shape == (a.shape[0], 5)
+        assert model.v_.shape == (a.shape[1], 5)
+        assert bool(jnp.all(model.u_ >= 0))
+        assert isinstance(model.result_, FitResult)
+
+
+def test_distributed_solver_single_device(small_problem, u0):
+    """The distributed strategy runs on the default 1x1 mesh anywhere and
+    lands near the single-device engine."""
+    _, a, _ = small_problem
+    model = EnforcedNMF(NMFConfig(k=5, iters=10, solver="distributed",
+                                  sparsity=Sparsity(t_u=55))).fit(a, u0=u0)
+    oracle = enforced_sparsity_nmf(a, u0, t_u=55, iters=10)
+    assert model.result_.final_nnz_u <= 55 + 5  # threshold-tie tolerance
+    np.testing.assert_allclose(model.result_.final_error,
+                               float(oracle.error[-1]), rtol=0.05)
+
+
+def test_early_stop_tolerance(small_problem, u0):
+    _, a, _ = small_problem
+    model = EnforcedNMF(NMFConfig(k=5, iters=75, tol=1e-2)).fit(a, u0=u0)
+    assert model.result_.converged
+    assert model.n_iter_ < 75
+    assert model.result_.final_residual <= 1e-2
+    # history arrays match the truncated iteration count
+    assert model.result_.residual.shape[0] == model.n_iter_
+
+
+# ---------------------------------------------------------------------------
+# transform (fold-in) and partial_fit (streaming)
+# ---------------------------------------------------------------------------
+
+def test_transform_reproduces_fitted_v(small_problem):
+    a_sp, _, _ = small_problem
+    model = EnforcedNMF(NMFConfig(
+        k=5, iters=40, sparsity=Sparsity(t_u=55, t_v=600))).fit(a_sp)
+    vt = model.transform(a_sp)
+    num = float(jnp.linalg.norm(vt - model.v_))
+    den = float(jnp.linalg.norm(model.v_))
+    assert num / den < 1e-3  # converged run: fold-in == final half-step
+
+
+def test_transform_folds_in_unseen_docs(small_problem):
+    a_sp, _, _ = small_problem
+    model = EnforcedNMF(NMFConfig(
+        k=5, iters=25, sparsity=Sparsity(t_u=55, t_v=600))).fit(a_sp)
+    a_new, _ = synthetic_journal_corpus(n_terms=300, n_docs=50,
+                                        n_journals=5, seed=9)
+    v_new = model.transform(a_new)
+    assert v_new.shape == (50, 5)
+    assert bool(jnp.all(v_new >= 0))
+    # absolute t_v budget rescales with the batch: 600 * 50/200 = 150
+    assert int(jnp.sum(v_new != 0)) <= 150 + 5
+
+
+def test_transform_requires_fit():
+    model = EnforcedNMF()
+    with pytest.raises(RuntimeError, match="not fitted"):
+        model.transform(jnp.ones((4, 3)))
+
+
+def test_transform_rejects_wrong_term_count(small_problem):
+    _, a, _ = small_problem
+    model = EnforcedNMF(NMFConfig(k=5, iters=4)).fit(a)
+    with pytest.raises(ValueError, match="terms"):
+        model.transform(jnp.ones((a.shape[0] + 1, 3)))
+
+
+def test_partial_fit_streams_chunks(small_problem):
+    _, a, _ = small_problem
+    model = EnforcedNMF(NMFConfig(k=5, iters=20, sparsity=Sparsity(t_u=55)))
+    for i in range(4):
+        model.partial_fit(a[:, i * 50:(i + 1) * 50])
+    assert model.n_docs_seen_ == 200
+    assert int(jnp.sum(model.u_ != 0)) <= 55 + 5
+    # the streamed model reconstructs the full corpus better than a random
+    # non-negative factorization of the same sparsity
+    streamed = model.score(a, v=model.transform(a))
+    fresh = EnforcedNMF(model.config)
+    fresh.partial_fit(a[:, :50], iters=1)
+    assert streamed < fresh.score(a, v=fresh.transform(a)) + 1e-6
+
+
+def test_partial_fit_then_transform_consistent_dims(small_problem):
+    a_sp, a, _ = small_problem
+    model = EnforcedNMF(NMFConfig(k=5, iters=10))
+    model.partial_fit(a[:, :100])
+    v = model.transform(a_sp)
+    assert v.shape == (200, 5)
+
+
+# ---------------------------------------------------------------------------
+# Sparsity spec
+# ---------------------------------------------------------------------------
+
+def test_sparsity_parse_roundtrip():
+    sp = Sparsity.parse("t_u=55,t_v=2000,mode=exact,num_steps=30")
+    assert sp == Sparsity(t_u=55, t_v=2000, mode="exact", num_steps=30)
+    assert Sparsity.parse("frac_u=0.02") == Sparsity(frac_u=0.02)
+    assert Sparsity.parse(None) == Sparsity()
+    with pytest.raises(ValueError):
+        Sparsity.parse("bogus=1")
+
+
+def test_sparsity_validation():
+    with pytest.raises(ValueError):
+        Sparsity(t_u=5, frac_u=0.1)
+    with pytest.raises(ValueError):
+        Sparsity(mode="diagonal")
+    with pytest.raises(ValueError):
+        Sparsity(frac_v=1.5)
+
+
+def test_sparsity_fraction_resolves_against_shape(small_problem, u0):
+    _, a, _ = small_problem
+    n = a.shape[0]
+    model = EnforcedNMF(NMFConfig(
+        k=5, iters=8, sparsity=Sparsity(frac_u=0.02))).fit(a, u0=u0)
+    budget = int(n * 5 * 0.02)
+    assert int(jnp.sum(model.u_ != 0)) <= budget + 5
+
+
+def test_sparsity_columnwise_mode(small_problem, u0):
+    _, a, _ = small_problem
+    model = EnforcedNMF(NMFConfig(
+        k=5, iters=8, sparsity=Sparsity(t_u=10, mode="columnwise"))
+    ).fit(a, u0=u0)
+    per_col = np.asarray(jnp.sum(model.u_ != 0, axis=0))
+    assert per_col.max() <= 10
+
+
+# ---------------------------------------------------------------------------
+# scipy interop
+# ---------------------------------------------------------------------------
+
+def test_scipy_roundtrip():
+    sps = pytest.importorskip("scipy.sparse")
+    from repro.sparse import from_scipy, to_scipy
+
+    m = sps.random(60, 40, density=0.15, random_state=0, format="csr",
+                   dtype=np.float32)
+    sp = from_scipy(m)
+    assert isinstance(sp, SpCSR) and sp.shape == (60, 40)
+    np.testing.assert_allclose(np.asarray(to_dense(sp)), m.toarray())
+    back = to_scipy(sp)
+    np.testing.assert_allclose(back.toarray(), m.toarray())
+
+
+def test_scipy_cap_truncates():
+    sps = pytest.importorskip("scipy.sparse")
+    from repro.sparse import from_scipy
+
+    m = sps.csr_matrix(np.ones((4, 8), np.float32))
+    sp = from_scipy(m, cap=3)
+    assert sp.cap == 3
+    assert int(sp.nnz()) == 4 * 3
+
+
+def test_fit_accepts_scipy_matrix(small_problem):
+    sps = pytest.importorskip("scipy.sparse")
+    _, a, _ = small_problem
+    a_scipy = sps.csr_matrix(np.asarray(a))
+    model = EnforcedNMF(NMFConfig(
+        k=5, iters=10, sparsity=Sparsity(t_u=55))).fit(a_scipy)
+    assert model.u_.shape == (a.shape[0], 5)
+    assert model.score(a) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Topic serving endpoint
+# ---------------------------------------------------------------------------
+
+def test_topic_server_serves_fold_in(small_problem):
+    from repro.serving import TopicRequest, TopicServer
+
+    a_sp, a, _ = small_problem
+    model = EnforcedNMF(NMFConfig(
+        k=5, iters=25, sparsity=Sparsity(t_u=55, t_v=600))).fit(a_sp)
+    server = TopicServer(model, max_batch=4)
+    a_np = np.asarray(a)
+    for rid in range(10):
+        col = a_np[:, rid]
+        terms = [(int(i), float(col[i])) for i in np.nonzero(col)[0]]
+        server.submit(TopicRequest(rid=rid, terms=terms, top=2))
+    done = server.run_until_drained()
+    assert len(done) == 10 and server.served == 10 and not server.queue
+    assert all(req.topics is not None for req in done)
+    # strongest topic of a training document should match its fitted loading
+    v_fit = np.asarray(model.v_)
+    agree = sum(
+        1 for req in done
+        if req.topics and req.topics[0][0] == int(np.argmax(v_fit[req.rid]))
+    )
+    assert agree >= 5
+
+
+def test_topic_server_requires_fitted():
+    from repro.serving import TopicServer
+
+    with pytest.raises(ValueError, match="fitted"):
+        TopicServer(EnforcedNMF())

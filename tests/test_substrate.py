@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.common import chunked_lm_loss
 
@@ -174,3 +174,58 @@ def test_serving_engine_drains_all_requests():
         engine.step()
     assert all(len(r.out) >= 1 for r in reqs)   # every request produced tokens
     assert not engine.queue
+
+
+def test_run_until_drained_returns_finished_requests():
+    """Regression: ``run_until_drained`` tracked finished request ids but
+    returned an empty list.  Uses a fake ``step`` so the drain-loop
+    bookkeeping is tested without bringing up a model."""
+    from repro.serving import Request, ServingEngine
+
+    class FakeEngine(ServingEngine):
+        def __init__(self, max_batch=2, ticks_per_request=2):
+            self.max_batch = max_batch
+            self.slots = [None] * max_batch
+            self.queue = []
+            self.ticks_per_request = ticks_per_request
+            self._ticks_left = {}
+
+        def submit(self, req):
+            req.out = []
+            self.queue.append(req)
+
+        def step(self):
+            for i in range(self.max_batch):
+                if self.slots[i] is None and self.queue:
+                    req = self.queue.pop(0)
+                    self.slots[i] = req
+                    self._ticks_left[req.rid] = self.ticks_per_request
+            emitted = {}
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                req.out.append(7)
+                emitted[req.rid] = 7
+                self._ticks_left[req.rid] -= 1
+                if self._ticks_left[req.rid] <= 0:
+                    self.slots[i] = None
+            return emitted
+
+    engine = FakeEngine()
+    reqs = [Request(rid=i, prompt=[1]) for i in range(5)]
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run_until_drained()
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3, 4]
+    assert all(len(r.out) == 2 for r in done)
+    assert not engine.queue and all(s is None for s in engine.slots)
+
+    # admitted-and-finished within one tick (e.g. max_new=1 / immediate
+    # EOS): the request never sits in a slot across tick boundaries but
+    # must still be returned
+    engine = FakeEngine(ticks_per_request=1)
+    reqs = [Request(rid=i, prompt=[1]) for i in range(3)]
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run_until_drained()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
