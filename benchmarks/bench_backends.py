@@ -1,0 +1,118 @@
+"""Backend benchmark: jnp vs Pallas BSR on the ALS hot-spot products.
+
+Times the three products the backend layer abstracts — ``A @ V``,
+``A^T @ U``, ``X^T X`` — plus a short end-to-end ``EnforcedNMF`` fit, for
+every registered backend, and writes ``BENCH_backends.json`` so the perf
+trajectory of the kernel path has data on every push.
+
+On CPU the Pallas kernels execute in interpret mode (correctness, not
+speed — expect them to lose; the number that matters there is the jnp
+baseline trend).  On a real TPU the same script compiles the kernels and
+measures the MXU path.
+
+    PYTHONPATH=src python benchmarks/bench_backends.py --smoke
+    PYTHONPATH=src python benchmarks/bench_backends.py --full --out bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timed(fn, *args, repeats=3):
+    out = fn(*args)
+    jax.block_until_ready(out)  # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6  # us
+
+
+def bench(n: int, m: int, k: int, iters: int, density: float, seed: int = 0):
+    from repro.backend import available_backends, get_backend
+    from repro.nmf import EnforcedNMF, NMFConfig, Sparsity
+    from repro.core import init_u0
+
+    rng = np.random.default_rng(seed)
+    a = rng.random((n, m)).astype(np.float32)
+    a[rng.random((n, m)) > density] = 0
+    u = jnp.asarray(rng.standard_normal((n, k)), dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((m, k)), dtype=jnp.float32)
+    u0 = init_u0(jax.random.PRNGKey(2), n, k)
+
+    results = {}
+    for name in available_backends():
+        be = get_backend(name)
+        t_prep = time.perf_counter()
+        op = be.prepare(a)
+        prep_us = (time.perf_counter() - t_prep) * 1e6
+        entry = {
+            "prepare_us": prep_us,
+            "matmul_us": _timed(lambda vv: be.matmul(op, vv), v),
+            "matmul_t_us": _timed(lambda uu: be.matmul_t(op, uu), u),
+            "gram_us": _timed(be.gram, u),
+        }
+        if name == "pallas-bsr":
+            entry["nnz_blocks"] = int(
+                np.asarray((op.bsr.tiles != 0).any(axis=(2, 3))).sum())
+            entry["interpret_mode"] = jax.default_backend() != "tpu"
+        if name in ("jnp-dense", "jnp-csr", "pallas-bsr"):
+            cfg = NMFConfig(k=k, iters=iters, solver="enforced",
+                            sparsity=Sparsity(t_u=max(n * k // 25, k)),
+                            backend=name)
+            t0 = time.perf_counter()
+            model = EnforcedNMF(cfg).fit(op, u0=u0)
+            entry["fit_s"] = time.perf_counter() - t0
+            entry["final_error"] = model.result_.final_error
+        results[name] = entry
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes so the kernel path is exercised in "
+                         "interpret mode on every CI push")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale shapes (use on TPU)")
+    ap.add_argument("--out", default="BENCH_backends.json")
+    args = ap.parse_args(argv)
+
+    if args.full:
+        n, m, k, iters, density = 6424, 1985, 5, 10, 0.02
+    elif args.smoke:
+        n, m, k, iters, density = 192, 160, 4, 3, 0.05
+    else:
+        n, m, k, iters, density = 1024, 512, 5, 5, 0.03
+    results = bench(n, m, k, iters, density)
+
+    payload = {
+        "shape": {"n": n, "m": m, "k": k, "iters": iters, "density": density},
+        "device": jax.default_backend(),
+        "platform": platform.platform(),
+        "jax_version": jax.__version__,
+        "backends": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(json.dumps(payload, indent=2))
+
+    # sanity: the backends must agree on the factorization quality
+    errs = [e["final_error"] for e in results.values() if "final_error" in e]
+    if errs and (max(errs) - min(errs)) > 5e-3:
+        print(f"ERROR: backend final_error spread {errs} exceeds 5e-3",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

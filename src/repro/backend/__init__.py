@@ -1,0 +1,28 @@
+"""Pluggable matmul backends for the ALS hot path.
+
+One import surface:
+
+    from repro.backend import get_backend, resolve_backend, select_backend
+
+    be = get_backend("pallas-bsr")
+    op = be.prepare(scipy_csr_matrix)   # two-orientation BSR, no densify
+    au = be.matmul(op, v)               # A @ V on the MXU
+
+Registered backends: ``jnp-dense`` (XLA dense baseline), ``jnp-csr``
+(padded-CSR gather/scatter reference), ``pallas-bsr`` (MXU streaming-tile
+kernels).  ``NMFConfig(backend=...)`` threads the choice through the
+solver family; ``None`` auto-selects from the operand type and device.
+"""
+from repro.backend.base import (
+    MatmulBackend, available_backends, default_backend_name, get_backend,
+    register_backend, resolve_backend, select_backend,
+)
+from repro.backend import jnp_backends as _jnp_backends  # noqa: F401 — registers
+from repro.backend import pallas_bsr as _pallas_bsr      # noqa: F401 — registers
+from repro.kernels.bsr import BSROperand
+
+__all__ = [
+    "MatmulBackend", "BSROperand", "available_backends",
+    "default_backend_name", "get_backend", "register_backend",
+    "resolve_backend", "select_backend",
+]

@@ -1,0 +1,119 @@
+"""Matmul-backend protocol, registry, and auto-selection.
+
+The ALS hot spot is three products — ``A @ V``, ``A^T @ U``, and the small
+Gram matrices ``X^T X`` — and the paper's enforced-sparsity claim is that
+all three scale with nnz, not n*m.  A :class:`MatmulBackend` bundles one
+implementation strategy for the trio; solvers dispatch through the
+registry so the Pallas MXU kernels, the padded-CSR gather/scatter
+reference, and the dense baseline are interchangeable behind one
+``NMFConfig(backend=...)`` switch.
+
+Backends are stateless singletons (hashable, compared by identity) so they
+can ride through ``jax.jit`` static arguments; the matrix operand itself is
+a pytree (dense array, :class:`~repro.sparse.csr.SpCSR`, or
+:class:`~repro.kernels.bsr.BSROperand`) traced as usual.
+
+Selection rules (:func:`select_backend` / :func:`default_backend_name`):
+
+* an operand already in a backend's native format picks that backend
+  (``BSROperand`` -> ``pallas-bsr``, ``SpCSR`` -> ``jnp-csr``, dense ->
+  ``jnp-dense``);
+* scipy-sparse *input* at ingest defaults to ``pallas-bsr`` on TPU (the
+  MXU fast path) and ``jnp-csr`` elsewhere (the Pallas kernels run in
+  interpret mode off-TPU — correct but slow, so they are opt-in there);
+* ``NMFConfig(backend=...)`` overrides everything.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Protocol, runtime_checkable
+
+import jax
+
+
+@runtime_checkable
+class MatmulBackend(Protocol):
+    """Strategy for the three ALS products plus operand ingest."""
+
+    #: registry key, e.g. ``"pallas-bsr"``
+    name: str
+    #: True when the backend's epilogue wants the fused relu+threshold-mask
+    #: sparsifier (single VMEM pass) instead of relu-then-mask
+    fuse_epilogue: bool
+
+    def accepts(self, a) -> bool:
+        """True when ``a`` is already this backend's native operand type."""
+        ...
+
+    def prepare(self, a, dtype=None):
+        """Coerce arbitrary input (dense, scipy sparse, SpCSR, BSROperand)
+        to this backend's native operand.  Host-side, called once at ingest;
+        never materializes a dense matrix from sparse input unless the
+        backend itself is dense."""
+        ...
+
+    def matmul(self, a, v: jax.Array) -> jax.Array:
+        """A @ V -> (n, k)."""
+        ...
+
+    def matmul_t(self, a, u: jax.Array) -> jax.Array:
+        """A^T @ U -> (m, k)."""
+        ...
+
+    def gram(self, x: jax.Array) -> jax.Array:
+        """X^T X -> (k, k)."""
+        ...
+
+
+_REGISTRY: Dict[str, MatmulBackend] = {}
+
+
+def register_backend(backend: MatmulBackend) -> MatmulBackend:
+    """Register a backend singleton under ``backend.name``."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> MatmulBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown matmul backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def select_backend(a) -> MatmulBackend:
+    """Auto-select by operand type (see module docstring)."""
+    for backend in _REGISTRY.values():
+        if backend.accepts(a):
+            return backend
+    raise TypeError(
+        f"no registered matmul backend accepts operand of type "
+        f"{type(a).__name__}; available: {available_backends()}")
+
+
+def resolve_backend(a, name: Optional[str] = None) -> MatmulBackend:
+    """Backend for an already-ingested operand: the named one (validated
+    against the operand type) or the type-selected default."""
+    if name is None:
+        return select_backend(a)
+    backend = get_backend(name)
+    if not backend.accepts(a):
+        raise TypeError(
+            f"backend {name!r} cannot consume operand of type "
+            f"{type(a).__name__}; ingest it first with "
+            f"get_backend({name!r}).prepare(...)")
+    return backend
+
+
+def default_backend_name(a) -> str:
+    """Ingest-time default for raw *input* (before ``prepare``): scipy
+    sparse goes to the kernel path on TPU and the jnp-csr reference
+    elsewhere; everything else keeps its native format."""
+    if hasattr(a, "tocoo"):  # scipy sparse, without a hard scipy import
+        return "pallas-bsr" if jax.default_backend() == "tpu" else "jnp-csr"
+    return select_backend(a).name

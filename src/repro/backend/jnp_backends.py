@@ -1,0 +1,75 @@
+"""Pure-jnp matmul backends: the dense baseline and the padded-CSR
+gather/scatter reference path (the pre-backend-layer production path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backend.base import register_backend
+from repro.sparse.csr import SpCSR, from_dense, from_scipy, spmm, spmm_t
+
+
+class JnpDenseBackend:
+    """XLA dense products — the oracle and the small-matrix baseline."""
+
+    name = "jnp-dense"
+    fuse_epilogue = False
+
+    def accepts(self, a) -> bool:
+        return isinstance(a, (jax.Array, np.ndarray))
+
+    def prepare(self, a, dtype=None):
+        if isinstance(a, jax.Array) and dtype is None:
+            return a  # pass-through: legacy results stay bit-for-bit
+        if isinstance(a, SpCSR):
+            from repro.sparse.csr import to_dense
+
+            a = to_dense(a)
+            return a if dtype is None else a.astype(dtype)
+        if hasattr(a, "toarray"):  # scipy sparse (an explicitly dense ask)
+            a = a.toarray()
+        return jnp.asarray(a, dtype=dtype)
+
+    def matmul(self, a, v):
+        return a @ v
+
+    def matmul_t(self, a, u):
+        return a.T @ u
+
+    def gram(self, x):
+        return x.T @ x
+
+
+class JnpCsrBackend:
+    """Padded-CSR gather/scatter products on ``SpCSR`` operands."""
+
+    name = "jnp-csr"
+    fuse_epilogue = False
+
+    def accepts(self, a) -> bool:
+        return isinstance(a, SpCSR)
+
+    def prepare(self, a, dtype=None):
+        if isinstance(a, SpCSR):
+            if dtype is not None and a.values.dtype != jnp.dtype(dtype):
+                return SpCSR(a.values.astype(dtype), a.cols, a.shape)
+            return a
+        if hasattr(a, "tocoo"):  # scipy sparse
+            sp = from_scipy(a)
+        else:
+            sp = from_dense(jnp.asarray(a))
+        return self.prepare(sp, dtype=dtype)
+
+    def matmul(self, a, v):
+        return spmm(a, v)
+
+    def matmul_t(self, a, u):
+        return spmm_t(a, u)
+
+    def gram(self, x):
+        return x.T @ x
+
+
+register_backend(JnpDenseBackend())
+register_backend(JnpCsrBackend())

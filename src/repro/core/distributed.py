@@ -35,7 +35,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.nmf import solve_gram
 
-__all__ = ["DistCSR", "distribute_csr", "dist_enforced_als", "make_dist_specs"]
+__all__ = ["DistCSR", "distribute_csr", "distribute_csr_from_padded",
+           "dist_enforced_als", "make_dist_specs"]
 
 from repro.compat import SHARD_MAP_NO_CHECK, shard_map as _shard_map
 
@@ -89,6 +90,69 @@ def distribute_csr(a_dense: np.ndarray, r: int, c: int) -> DistCSR:
     vals_t, cols_t = pack(grid_t)
     return DistCSR(
         jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(vals_t), jnp.asarray(cols_t), (n, m)
+    )
+
+
+def _pack_coo_shards(rows, cols, vals, r: int, c: int, n_loc: int,
+                     m_loc: int, transposed: bool):
+    """Vectorized host packing of element COO into the (R, C, rows, cap)
+    local padded-CSR layout.  ``transposed=True`` packs the A^T orientation
+    (local rows are the original columns) while keeping the (R, C) grid
+    indexed by A's block coordinates."""
+    si = rows // n_loc
+    sj = cols // m_loc
+    lr = rows % n_loc
+    lc = cols % m_loc
+    loc_rows = m_loc if transposed else n_loc
+    line, stored = (lc, lr) if transposed else (lr, lc)
+    # group nonzeros by (shard, local row) with one stable sort; the slot of
+    # an element is its index within its run of equal keys.  Group starts
+    # come from run-length boundaries of the sorted keys, not a bincount
+    # over the full r*c*loc_rows key space, so host temporaries stay
+    # nnz-proportional (the padded shard arrays below are the only
+    # full-size allocation).
+    key = (si.astype(np.int64) * c + sj) * loc_rows + line
+    order = np.argsort(key, kind="stable")
+    ks = key[order]
+    if len(ks):
+        new_run = np.concatenate([[True], ks[1:] != ks[:-1]])
+        run_starts = np.flatnonzero(new_run)
+        run_id = np.cumsum(new_run) - 1
+        slot = np.arange(len(ks)) - run_starts[run_id]
+        run_lens = np.diff(np.append(run_starts, len(ks)))
+        cap = max(int(run_lens.max(initial=1)), 1)
+    else:
+        slot = np.zeros(0, dtype=np.int64)
+        cap = 1
+    vals_arr = np.zeros((r, c, loc_rows, cap), np.float32)
+    cols_arr = np.zeros((r, c, loc_rows, cap), np.int32)
+    o = order
+    vals_arr[si[o], sj[o], line[o], slot] = vals[o]
+    cols_arr[si[o], sj[o], line[o], slot] = stored[o]
+    return vals_arr, cols_arr
+
+
+def distribute_csr_from_padded(a, r: int, c: int) -> DistCSR:
+    """Build the (R, C) shard grid directly from a padded-CSR ``SpCSR`` —
+    host work and temporaries proportional to nnz (plus the padded shard
+    arrays themselves), never materializing the dense (n, m) matrix (an
+    O(n*m) driver allocation at exactly the scale the distributed solver
+    exists for)."""
+    n, m = a.shape
+    n_loc, m_loc = -(-n // r), -(-m // c)
+    values = np.asarray(a.values)
+    cols = np.asarray(a.cols)
+    mask = values != 0
+    rows_e = np.broadcast_to(np.arange(n)[:, None], values.shape)[mask]
+    cols_e = cols[mask].astype(np.int64)
+    vals_e = values[mask].astype(np.float32)
+    vals_arr, cols_arr = _pack_coo_shards(
+        rows_e, cols_e, vals_e, r, c, n_loc, m_loc, transposed=False)
+    vals_t, cols_t = _pack_coo_shards(
+        rows_e, cols_e, vals_e, r, c, n_loc, m_loc, transposed=True)
+    return DistCSR(
+        jnp.asarray(vals_arr), jnp.asarray(cols_arr),
+        jnp.asarray(vals_t), jnp.asarray(cols_t), (n, m)
     )
 
 

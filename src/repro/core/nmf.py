@@ -5,6 +5,11 @@ The engine runs a fixed number of jit-compiled iterations (the paper's
 metrics per iteration: relative residual R, relative error E, and the running
 max NNZ(U)+NNZ(V) (Fig. 6).  Sparsity enforcement (Algorithm 2) is injected
 as ``sparsify_u`` / ``sparsify_v`` callables — identity recovers Algorithm 1.
+
+The hot-spot products A @ V / A^T @ U / X^T X dispatch through the pluggable
+matmul-backend layer (:mod:`repro.backend`): dense XLA, padded-CSR
+gather/scatter, or the Pallas BSR MXU kernels, auto-selected from the
+operand type or forced with ``backend=...``.
 """
 from __future__ import annotations
 
@@ -15,10 +20,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import metrics as M
-from repro.sparse.csr import SpCSR, spmm, spmm_t
+from repro.kernels.bsr import BSROperand
+from repro.sparse.csr import SpCSR
 
 Sparsifier = Callable[[jax.Array], jax.Array]
-Matrix = Union[jax.Array, SpCSR]
+Matrix = Union[jax.Array, SpCSR, BSROperand]
 
 __all__ = ["NMFResult", "init_u0", "als_nmf", "solve_gram"]
 
@@ -55,27 +61,84 @@ def solve_gram(gram: jax.Array, rhs: jax.Array, ridge: float = 1e-8) -> jax.Arra
     return jax.scipy.linalg.cho_solve(cho, rhs.T).T
 
 
-def _matmul_t(a: Matrix, u: jax.Array) -> jax.Array:
-    """A^T @ u."""
+def _resolve(a: Matrix, backend: Optional[str]):
+    from repro.backend import resolve_backend
+
+    return resolve_backend(a, backend)
+
+
+def _matmul_t(a: Matrix, u: jax.Array, backend: Optional[str] = None) -> jax.Array:
+    """A^T @ u through the backend layer."""
+    return _resolve(a, backend).matmul_t(a, u)
+
+
+def _matmul(a: Matrix, v: jax.Array, backend: Optional[str] = None) -> jax.Array:
+    """A @ v through the backend layer."""
+    return _resolve(a, backend).matmul(a, v)
+
+
+def _sqnorm(a: Matrix) -> jax.Array:
+    """||A||_F^2 without densifying sparse operands."""
+    if isinstance(a, (SpCSR, BSROperand)):
+        return a.sqnorm()
+    return jnp.sum(a.astype(jnp.float32) ** 2)
+
+
+def _bsr_relative_error(a: BSROperand, u: jax.Array, v: jax.Array,
+                        a_sqnorm: jax.Array) -> jax.Array:
+    """||A - UV^T||_F / ||A||_F with the cross term <A, UV^T> contracted
+    tile-wise: sum over occupied tiles of sum(tile * (U_blk V_blk^T)).
+    Peak temporary is ~tile_volume * k / bk — a bk-fold saving over
+    flattening the tiles to COO and gathering (tile_volume, k) slabs of U
+    and V, which mattered at exactly the large-A scale this operand
+    targets."""
+    bsr = a.bsr
+    nrb, bcap, bm, bk = bsr.tiles.shape
+    n, m = a.shape
+    k = u.shape[1]
+    uf = u.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    u_blk = jnp.pad(uf, ((0, nrb * bm - n), (0, 0))).reshape(nrb, bm, k)
+    ncb = -(-m // bk)
+    v_blk = jnp.pad(vf, ((0, ncb * bk - m), (0, 0))).reshape(ncb, bk, k)
+    v_blk = v_blk[bsr.block_cols]  # (nrb, bcap, bk, k); padded slots see
+    # block 0, harmless: their tiles are all-zero
+    cross = jnp.einsum("isrc,ird,iscd->",
+                       bsr.tiles.astype(jnp.float32), u_blk, v_blk)
+    approx_sq = jnp.sum((uf.T @ uf) * (vf.T @ vf))
+    err_sq = jnp.maximum(a_sqnorm - 2.0 * cross + approx_sq, 0.0)
+    return jnp.sqrt(err_sq) / jnp.sqrt(jnp.maximum(a_sqnorm, 1e-30))
+
+
+def _relative_error(a: Matrix, u: jax.Array, v: jax.Array,
+                    a_sqnorm: Optional[jax.Array] = None) -> jax.Array:
+    """E = ||A - U V^T||_F / ||A||_F for any operand type."""
+    if a_sqnorm is None:
+        a_sqnorm = _sqnorm(a)
+    if isinstance(a, BSROperand):
+        return _bsr_relative_error(a, u, v, a_sqnorm)
     if isinstance(a, SpCSR):
-        return spmm_t(a, u)
-    return a.T @ u
+        rows = jnp.broadcast_to(jnp.arange(a.n)[:, None], a.cols.shape)
+        return M.relative_error_sparse(
+            a.values.ravel(), rows.ravel(), a.cols.ravel(), a_sqnorm, u, v)
+    return M.relative_error(a, u, v)
 
 
-def _matmul(a: Matrix, v: jax.Array) -> jax.Array:
-    """A @ v."""
-    if isinstance(a, SpCSR):
-        return spmm(a, v)
-    return a @ v
-
-
-def _identity(x: jax.Array) -> jax.Array:
-    return x
+def _epilogue(x: jax.Array, sparsify: Optional[Sparsifier]) -> jax.Array:
+    """Non-negativity projection + sparsity enforcement.  Sparsifiers that
+    declare ``fuses_relu`` (e.g. :class:`repro.core.topk.FusedReluTopK`)
+    own the relu too, running both as one fused pass."""
+    if sparsify is None:
+        return jnp.maximum(x, 0.0)
+    if getattr(sparsify, "fuses_relu", False):
+        return sparsify(x)
+    return sparsify(jnp.maximum(x, 0.0))
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("iters", "sparsify_u", "sparsify_v", "track_error"),
+    static_argnames=("iters", "sparsify_u", "sparsify_v", "track_error",
+                     "backend"),
 )
 def als_nmf(
     a: Matrix,
@@ -84,47 +147,35 @@ def als_nmf(
     sparsify_u: Optional[Sparsifier] = None,
     sparsify_v: Optional[Sparsifier] = None,
     track_error: bool = True,
+    backend: Optional[str] = None,
 ) -> NMFResult:
     """Projected ALS (Alg. 1) / Enforced Sparsity ALS (Alg. 2).
 
     One iteration:
       V = relu(A^T U (U^T U)^{-1});  V = sparsify_v(V)
       U = relu(A V (V^T V)^{-1});    U = sparsify_u(U)
+
+    ``backend`` names a registered matmul backend (``"jnp-dense"``,
+    ``"jnp-csr"``, ``"pallas-bsr"``); ``None`` auto-selects from the
+    operand type, which reproduces the legacy dispatch bit-for-bit.
     """
-    sparsify_u = sparsify_u or _identity
-    sparsify_v = sparsify_v or _identity
+    be = _resolve(a, backend)
     n, k = u0.shape
     m = a.shape[1]
-    if isinstance(a, SpCSR):
-        a_sqnorm = a.sqnorm()
-    else:
-        a_sqnorm = jnp.sum(a.astype(jnp.float32) ** 2)
+    a_sqnorm = _sqnorm(a)
 
     def error_of(u, v):
         if not track_error:
             return jnp.float32(0.0)
-        if isinstance(a, SpCSR):
-            return M.relative_error_sparse(
-                a.values.ravel(),
-                jnp.broadcast_to(jnp.arange(a.n)[:, None], a.cols.shape).ravel(),
-                a.cols.ravel(),
-                a_sqnorm,
-                u,
-                v,
-            )
-        return M.relative_error(a, u, v)
+        return _relative_error(a, u, v, a_sqnorm)
 
     def body(carry, _):
         u, _v, max_nnz = carry
-        gram_u = u.T @ u
-        v = solve_gram(gram_u, _matmul_t(a, u))
-        v = jnp.maximum(v, 0.0)
-        v = sparsify_v(v)
+        v = solve_gram(be.gram(u), be.matmul_t(a, u))
+        v = _epilogue(v, sparsify_v)
 
-        gram_v = v.T @ v
-        u_new = solve_gram(gram_v, _matmul(a, v))
-        u_new = jnp.maximum(u_new, 0.0)
-        u_new = sparsify_u(u_new)
+        u_new = solve_gram(be.gram(v), be.matmul(a, v))
+        u_new = _epilogue(u_new, sparsify_u)
 
         r = M.relative_residual(u_new, u)
         e = error_of(u_new, v)

@@ -22,8 +22,9 @@ float data ties are measure-zero.  The exact variant keeps exactly ``t``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +34,7 @@ __all__ = [
     "topk_project_exact",
     "topk_project_bisect",
     "topk_project_columns",
+    "FusedReluTopK",
     "nnz",
 ]
 
@@ -119,6 +121,48 @@ def topk_project_bisect(x: jax.Array, t: int, num_steps: int = 40) -> jax.Array:
         return jnp.zeros_like(x)
     tau = topk_threshold_bisect(x, t, num_steps)
     return jnp.where(jnp.abs(x) >= tau, x, 0)
+
+
+# ---------------------------------------------------------------------------
+# Fused relu + top-t epilogue (Pallas)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FusedReluTopK:
+    """Whole ALS epilogue — ``relu`` then top-t threshold mask — as one
+    fused VMEM-tiled Pallas pass (``kernels.project_mask``).
+
+    The bisection counts positives of the raw input directly (the count
+    reduction fuses in XLA, so the relu'd copy is never materialized) and
+    is bit-identical to ``relu`` followed by :func:`topk_project_bisect`
+    whenever the input has at least one positive entry.  Frozen dataclass:
+    hashable by value, so it rides through the jit-static ``sparsify_*``
+    engine arguments.  The engine skips its own relu when a sparsifier sets
+    ``fuses_relu``.
+    """
+
+    t: int
+    num_steps: int = 40
+    interpret: Optional[bool] = None
+
+    fuses_relu = True
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        from repro.kernels.ops import fused_project_mask
+
+        if int(self.t) >= x.size:
+            return jnp.maximum(x, 0.0)
+        if int(self.t) == 0:
+            return jnp.zeros_like(x)
+
+        def count_pos_ge(_absx, tau):
+            # count on relu(x) without a materialized relu copy
+            return jnp.sum(jnp.maximum(x, 0.0) >= tau)
+
+        hi = jnp.maximum(jnp.max(x), 0.0)
+        tau = topk_threshold_bisect(x, self.t, self.num_steps,
+                                    count_fn=count_pos_ge, hi_init=hi)
+        return fused_project_mask(x, tau, interpret=self.interpret)
 
 
 # ---------------------------------------------------------------------------

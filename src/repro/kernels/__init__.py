@@ -1,9 +1,12 @@
 """Pallas TPU kernels (interpret=True validated on CPU; see ops.py)."""
 from repro.kernels.ops import (
-    BSR, bsr_from_dense, bsr_to_dense, bsr_transpose,
-    spmm, fused_project_mask, gram_matrix,
+    BSR, BSROperand, bsr_from_dense, bsr_from_scipy, bsr_operand,
+    bsr_to_dense, bsr_transpose,
+    spmm, spmm_t, fused_project_mask, gram_matrix,
 )
 from repro.kernels.flash_attention import flash_attention
 
-__all__ = ["BSR", "bsr_from_dense", "bsr_to_dense", "bsr_transpose",
-           "spmm", "fused_project_mask", "gram_matrix", "flash_attention"]
+__all__ = ["BSR", "BSROperand", "bsr_from_dense", "bsr_from_scipy",
+           "bsr_operand", "bsr_to_dense", "bsr_transpose",
+           "spmm", "spmm_t", "fused_project_mask", "gram_matrix",
+           "flash_attention"]

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.bsr import BSR
+from repro.kernels.bsr import BSR, BSROperand
 
 
 def _spmm_kernel(block_cols_ref, tiles_ref, u_ref, out_ref):
@@ -71,3 +71,15 @@ def bsr_spmm(a: BSR, u: jax.Array, kb: int = 128, interpret: bool = False) -> ja
         interpret=interpret,
     )(a.block_cols, a.tiles, u_p)
     return out[:n, :k]
+
+
+def bsr_spmm_t(a, u: jax.Array, kb: int = 128, interpret: bool = False) -> jax.Array:
+    """Compute ``dense(A)^T @ U`` scatter-free via the transposed-format BSR
+    copy built tile-wise at ingest (see :func:`repro.kernels.bsr.bsr_transpose`).
+
+    ``a`` is either a :class:`BSROperand` (the two-orientation ingest
+    product) or the transposed-format :class:`BSR` itself; the product is
+    the same streaming-tile kernel as :func:`bsr_spmm`, run on A^T's tiles.
+    """
+    a_t = a.bsr_t if isinstance(a, BSROperand) else a
+    return bsr_spmm(a_t, u, kb=kb, interpret=interpret)

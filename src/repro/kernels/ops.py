@@ -8,8 +8,11 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.bsr import BSR, bsr_from_dense, bsr_to_dense, bsr_transpose
-from repro.kernels.bsr_spmm import bsr_spmm
+from repro.kernels.bsr import (
+    BSR, BSROperand, bsr_from_dense, bsr_from_scipy, bsr_operand,
+    bsr_to_dense, bsr_transpose,
+)
+from repro.kernels.bsr_spmm import bsr_spmm, bsr_spmm_t
 from repro.kernels.project_mask import project_mask
 from repro.kernels.gram import gram
 
@@ -23,6 +26,14 @@ def spmm(a: BSR, u: jax.Array, interpret: bool | None = None) -> jax.Array:
     if interpret is None:
         interpret = _default_interpret()
     return bsr_spmm(a, u, interpret=interpret)
+
+
+def spmm_t(a, u: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """dense(A)^T @ U via the BSR Pallas kernel on the transposed-format
+    copy (``a``: BSROperand, or the transposed BSR itself)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return bsr_spmm_t(a, u, interpret=interpret)
 
 
 def fused_project_mask(x: jax.Array, tau: jax.Array, interpret: bool | None = None) -> jax.Array:
@@ -39,10 +50,14 @@ def gram_matrix(u: jax.Array, interpret: bool | None = None) -> jax.Array:
 
 __all__ = [
     "BSR",
+    "BSROperand",
     "bsr_from_dense",
+    "bsr_from_scipy",
+    "bsr_operand",
     "bsr_to_dense",
     "bsr_transpose",
     "spmm",
+    "spmm_t",
     "fused_project_mask",
     "gram_matrix",
 ]

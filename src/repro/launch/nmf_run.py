@@ -119,6 +119,9 @@ def main(argv=None):
     ap.add_argument("--t-v", type=int, default=None)
     ap.add_argument("--tol", type=float, default=0.0,
                     help="early-stop tolerance on the relative residual")
+    ap.add_argument("--backend", default=None,
+                    help="matmul backend for the ALS hot path "
+                         "(jnp-dense / jnp-csr / pallas-bsr; default: auto)")
     ap.add_argument("--small", action="store_true", help="1/8 scale")
     args = ap.parse_args(argv)
 
@@ -140,7 +143,7 @@ def main(argv=None):
         n_terms=n, n_docs=m, n_journals=cfg.get("n_journals", 5))
     model = EnforcedNMF(NMFConfig(
         k=k, iters=iters, sparsity=sparsity, solver=args.solver,
-        tol=args.tol))
+        tol=args.tol, backend=args.backend))
     t0 = time.time()
     model.fit(a)
     jax.block_until_ready(model.u_)

@@ -80,11 +80,14 @@ class Sparsity:
         cap = rows if self.mode == "columnwise" else rows * k
         return min(int(t), cap)
 
-    def sparsifier(self, rows: int, k: int, which: str
+    def sparsifier(self, rows: int, k: int, which: str, fused: bool = False
                    ) -> Optional[Callable[[jax.Array], jax.Array]]:
         """Hashable callable enforcing this spec on a ``(rows, k)`` factor,
         suitable for the jit-static ``sparsify_*`` arguments of the ALS
-        engine; ``None`` for no enforcement."""
+        engine; ``None`` for no enforcement.  ``fused=True`` (only honored
+        in ``"global"`` mode) returns the relu+mask-fusing Pallas epilogue
+        — the bisection threshold is identical, but the two elementwise
+        passes collapse into one VMEM-tiled kernel."""
         t = self.resolve(rows, k, which)
         if t is None:
             return None
@@ -92,6 +95,8 @@ class Sparsity:
             return functools.partial(topk.topk_project_columns, t_per_col=t)
         if self.mode == "exact":
             return functools.partial(topk.topk_project_exact, t=t)
+        if fused:
+            return topk.FusedReluTopK(t=t, num_steps=self.num_steps)
         return functools.partial(topk.topk_project_bisect, t=t,
                                  num_steps=self.num_steps)
 
@@ -139,6 +144,12 @@ class NMFConfig:
       or ``"distributed"`` (see :mod:`repro.nmf.registry`).
     * ``dtype`` — factor dtype name (numpy/scipy inputs are cast to this;
       jax/SpCSR inputs are taken as-is so legacy results match bit-for-bit).
+    * ``backend`` — matmul backend for the ALS hot path: ``"jnp-dense"``,
+      ``"jnp-csr"``, or ``"pallas-bsr"`` (see :mod:`repro.backend`).
+      ``None`` auto-selects from the input type and device: scipy-sparse
+      corpora take the Pallas BSR kernel path on TPU and the jnp-csr
+      reference elsewhere.  Only the ALS family (``"als"``/``"enforced"``)
+      supports ``"pallas-bsr"``.
     * ``tol`` — early-stop tolerance on the relative residual
       ``||U_i - U_{i-1}||_F / ||U_i||_F``; 0 disables early stopping.
     * ``seed`` — PRNG seed for the default initial guess.
@@ -153,6 +164,7 @@ class NMFConfig:
     sparsity: Sparsity = dataclasses.field(default_factory=Sparsity)
     solver: str = "enforced"
     dtype: str = "float32"
+    backend: Optional[str] = None
     tol: float = 0.0
     seed: int = 0
     track_error: bool = True
@@ -167,6 +179,18 @@ class NMFConfig:
         if self.solver == "sequential" and self.k % self.block_size:
             raise ValueError(
                 f"block_size ({self.block_size}) must divide k ({self.k})")
+        if self.backend is not None:
+            from repro.backend import available_backends
+
+            if self.backend not in available_backends():
+                raise ValueError(
+                    f"unknown backend {self.backend!r}; "
+                    f"available: {available_backends()}")
+            if (self.backend == "pallas-bsr"
+                    and self.solver in ("sequential", "distributed")):
+                raise ValueError(
+                    f"backend 'pallas-bsr' is only supported by the ALS "
+                    f"family solvers (als/enforced), not {self.solver!r}")
         jnp.dtype(self.dtype)  # fail fast on bad dtype names
 
     @property

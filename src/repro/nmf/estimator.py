@@ -25,8 +25,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.nmf import Matrix, _matmul, _matmul_t, init_u0, solve_gram
-from repro.core import metrics as M
+from repro.backend import BSROperand, default_backend_name, get_backend
+from repro.core.nmf import (
+    Matrix, _matmul, _matmul_t, _relative_error, init_u0, solve_gram,
+)
 from repro.nmf.config import NMFConfig, Sparsity
 from repro.nmf.registry import get_solver
 from repro.nmf.result import FitResult
@@ -34,7 +36,7 @@ from repro.sparse.csr import SpCSR
 
 __all__ = ["EnforcedNMF"]
 
-ArrayLike = Union[jax.Array, np.ndarray, SpCSR]
+ArrayLike = Union[jax.Array, np.ndarray, SpCSR, BSROperand]
 
 
 class EnforcedNMF:
@@ -74,18 +76,31 @@ class EnforcedNMF:
     # -- input coercion ------------------------------------------------------
 
     def _coerce(self, a: ArrayLike) -> Matrix:
-        """Accept jax/numpy dense, SpCSR, or scipy sparse.  jax arrays and
-        SpCSR pass through untouched (bit-for-bit with the legacy entry
-        points); numpy/scipy are cast to ``config.dtype``."""
-        if isinstance(a, (SpCSR, jax.Array)):
-            return a
-        if hasattr(a, "tocoo"):  # scipy sparse, without a hard scipy import
-            from repro.sparse.csr import from_scipy
+        """Accept jax/numpy dense, SpCSR, BSROperand, or scipy sparse and
+        ingest it for ``config.backend``.
 
-            sp = from_scipy(a)
-            return SpCSR(sp.values.astype(self.config.jnp_dtype), sp.cols,
-                         sp.shape)
-        return jnp.asarray(a, dtype=self.config.jnp_dtype)
+        With no explicit backend, jax arrays / SpCSR / BSROperand pass
+        through untouched (bit-for-bit with the legacy entry points) and
+        scipy sparse takes the device default (Pallas BSR kernels on TPU,
+        jnp-csr elsewhere) — never densifying.  An explicit
+        ``config.backend`` converts whatever comes in to that backend's
+        operand; numpy/scipy input is cast to ``config.dtype``."""
+        name = self.config.backend
+        if name is None:
+            if isinstance(a, (SpCSR, BSROperand, jax.Array)):
+                return a
+            if hasattr(a, "tocoo"):  # scipy sparse, without a hard import
+                name = default_backend_name(a)
+                if (name == "pallas-bsr"
+                        and self.config.solver in ("sequential",
+                                                   "distributed")):
+                    # those engines dispatch on dense/SpCSR only
+                    name = "jnp-csr"
+            else:
+                return jnp.asarray(a, dtype=self.config.jnp_dtype)
+        native = isinstance(a, (SpCSR, BSROperand, jax.Array))
+        return get_backend(name).prepare(
+            a, dtype=None if native else self.config.jnp_dtype)
 
     def _check_fitted(self):
         if self.u_ is None:
@@ -219,9 +234,4 @@ class EnforcedNMF:
                 v = self.v_
             else:
                 v = self.transform(a)
-        if isinstance(a, SpCSR):
-            rows = jnp.broadcast_to(jnp.arange(a.n)[:, None], a.cols.shape)
-            return float(M.relative_error_sparse(
-                a.values.ravel(), rows.ravel(), a.cols.ravel(),
-                a.sqnorm(), self.u_, v))
-        return float(M.relative_error(a, self.u_, v))
+        return float(_relative_error(a, self.u_, v))

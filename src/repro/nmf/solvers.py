@@ -17,10 +17,11 @@ import numpy as np
 
 from repro.core.nmf import Matrix, als_nmf
 from repro.core.sequential import sequential_als_nmf
+from repro.kernels.bsr import BSROperand
 from repro.nmf.config import NMFConfig
 from repro.nmf.registry import register_solver
 from repro.nmf.result import FitResult
-from repro.sparse.csr import SpCSR, to_dense
+from repro.sparse.csr import SpCSR
 
 __all__ = ["solve_als", "solve_enforced", "solve_sequential",
            "solve_distributed"]
@@ -31,15 +32,34 @@ __all__ = ["solve_als", "solve_enforced", "solve_sequential",
 _TOL_CHUNK = 10
 
 
+def _reject_bsr_operand(a: Matrix, solver_name: str) -> None:
+    """The legacy sequential/distributed engines dispatch on dense/SpCSR
+    only; a BSR operand reaching them would fail deep inside with cryptic
+    shape/attribute errors (the config-level check only sees explicitly
+    named backends, not an operand passed in directly)."""
+    if isinstance(a, BSROperand):
+        raise TypeError(
+            f"the {solver_name!r} solver does not support BSR operands "
+            "(backend 'pallas-bsr'); use the als/enforced solvers, or "
+            "pass the matrix as dense / SpCSR / scipy sparse")
+
+
 def _als_family(a: Matrix, config: NMFConfig, u0: jax.Array,
                 solver_name: str) -> FitResult:
+    from repro.backend import resolve_backend
+
     n, m = a.shape
-    sp_u = config.sparsity.sparsifier(n, config.k, "u")
-    sp_v = config.sparsity.sparsifier(m, config.k, "v")
+    # fuse the relu+threshold epilogue into one Pallas pass when the
+    # backend asks for it (the jnp backends keep the legacy two-pass
+    # epilogue so legacy results stay bit-for-bit)
+    fused = resolve_backend(a, config.backend).fuse_epilogue
+    sp_u = config.sparsity.sparsifier(n, config.k, "u", fused=fused)
+    sp_v = config.sparsity.sparsifier(m, config.k, "v", fused=fused)
 
     def run(u_init, iters):
         return als_nmf(a, u_init, iters=iters, sparsify_u=sp_u,
-                       sparsify_v=sp_v, track_error=config.track_error)
+                       sparsify_v=sp_v, track_error=config.track_error,
+                       backend=config.backend)
 
     if config.tol <= 0.0:
         return FitResult.from_nmf_result(run(u0, config.iters), solver_name)
@@ -84,6 +104,7 @@ def solve_sequential(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
     legacy engine enforces them via bisection regardless of ``sparsity.mode``.
     Early-stop ``tol`` is ignored — blocks run their fixed budget.
     """
+    _reject_bsr_operand(a, "sequential")
     k2 = config.block_size
     blocks = config.k // k2
     if u0.shape[1] == config.k and k2 != config.k:
@@ -109,12 +130,15 @@ def solve_distributed(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
     the same shard_map code path the pod dry-run lowers; larger meshes need
     ``rows * cols`` visible devices and shapes divisible by the grid.
 
-    Input is densified host-side to build the 2-D-sharded ``DistCSR`` (the
-    test/driver ingest path); production-scale ingest builds shards directly
-    — see ``launch/nmf_run.py``'s dry-run cell.
+    ``SpCSR`` input is sharded directly from the padded-CSR arrays —
+    nnz-proportional host work, no dense (n, m) driver allocation; dense
+    input goes through the dense test/driver ingest path.
     """
-    from repro.core.distributed import dist_enforced_als, distribute_csr
+    from repro.core.distributed import (
+        dist_enforced_als, distribute_csr, distribute_csr_from_padded,
+    )
 
+    _reject_bsr_operand(a, "distributed")
     r, c = config.mesh_shape
     n, m = a.shape
     if n % r or m % c:
@@ -128,8 +152,10 @@ def solve_distributed(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
     mesh = jax.sharding.Mesh(
         np.asarray(devices[: r * c]).reshape(r, c), ("data", "model"))
 
-    a_np = np.asarray(to_dense(a) if isinstance(a, SpCSR) else a)
-    dist = distribute_csr(a_np, r, c)
+    if isinstance(a, SpCSR):
+        dist = distribute_csr_from_padded(a, r, c)
+    else:
+        dist = distribute_csr(np.asarray(a), r, c)
     run = dist_enforced_als(
         mesh, ("data",), "model",
         t_u=config.sparsity.resolve(n, config.k, "u"),

@@ -1,0 +1,369 @@
+"""Matmul-backend layer: registry/selection rules, pallas-bsr parity with
+the dense oracle (spmm / spmm_t / gram across awkward shapes, empty
+row-blocks, cap-overflow rows, f32/bf16), tile-wise BSR ingest (scipy
+direct, transpose without densifying), sparse-ingest truncation policy,
+no-densify distributed sharding, and the end-to-end
+``EnforcedNMF(backend="pallas-bsr")`` fit matching the jnp backend."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backend import (
+    available_backends, default_backend_name, get_backend, resolve_backend,
+    select_backend,
+)
+from repro.kernels.bsr import (
+    BSR, BSROperand, bsr_from_dense, bsr_from_scipy, bsr_operand,
+    bsr_to_dense, bsr_transpose,
+)
+from repro.kernels.bsr_spmm import bsr_spmm, bsr_spmm_t
+from repro.nmf import EnforcedNMF, NMFConfig, Sparsity
+from repro.sparse import SpCSR, from_coo, from_dense, from_scipy, to_dense
+
+sps = pytest.importorskip("scipy.sparse")
+
+
+def _rand_sparse(rng, n, m, density=0.05, dtype=np.float32):
+    a = rng.random((n, m)).astype(dtype)
+    a[rng.random((n, m)) > density] = 0
+    return a
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    from repro.data import synthetic_journal_corpus
+
+    a_sp, dj = synthetic_journal_corpus(n_terms=300, n_docs=200,
+                                        n_journals=5, seed=1)
+    return a_sp
+
+
+# ---------------------------------------------------------------------------
+# Registry and selection rules
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_backends():
+    assert {"jnp-dense", "jnp-csr", "pallas-bsr"} <= set(available_backends())
+    with pytest.raises(ValueError, match="unknown matmul backend"):
+        get_backend("nope")
+
+
+def test_select_backend_by_operand_type():
+    rng = np.random.default_rng(0)
+    a = _rand_sparse(rng, 32, 16)
+    assert select_backend(jnp.asarray(a)).name == "jnp-dense"
+    assert select_backend(from_dense(a)).name == "jnp-csr"
+    op = bsr_operand(a, bm=16, bk=16)
+    assert select_backend(op).name == "pallas-bsr"
+    with pytest.raises(TypeError, match="no registered matmul backend"):
+        select_backend("not a matrix")
+
+
+def test_resolve_backend_rejects_mismatched_operand():
+    a = jnp.ones((8, 8))
+    with pytest.raises(TypeError, match="cannot consume"):
+        resolve_backend(a, "pallas-bsr")
+
+
+def test_default_backend_for_scipy_off_tpu():
+    m = sps.random(10, 8, density=0.5, random_state=0, format="csr")
+    expect = "pallas-bsr" if jax.default_backend() == "tpu" else "jnp-csr"
+    assert default_backend_name(m) == expect
+
+
+def test_config_validates_backend():
+    with pytest.raises(ValueError, match="unknown backend"):
+        NMFConfig(backend="bogus")
+    with pytest.raises(ValueError, match="only supported by the ALS"):
+        NMFConfig(backend="pallas-bsr", solver="distributed")
+    NMFConfig(backend="pallas-bsr", solver="enforced")  # fine
+
+
+# ---------------------------------------------------------------------------
+# pallas-bsr parity with the dense oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,k", [(128, 128, 8), (257, 129, 33),
+                                   (64, 512, 96), (100, 70, 5)])
+def test_pallas_spmm_and_spmm_t_match_dense(n, m, k):
+    rng = np.random.default_rng(n + m)
+    a = _rand_sparse(rng, n, m)
+    a[: min(40, n)] = 0  # empty rows -> empty row-blocks at bm=32
+    be = get_backend("pallas-bsr")
+    op = bsr_operand(a, bm=32, bk=32)
+    v = jnp.asarray(rng.standard_normal((m, k)), dtype=jnp.float32)
+    u = jnp.asarray(rng.standard_normal((n, k)), dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(be.matmul(op, v)), a @ np.asarray(v),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(be.matmul_t(op, u)),
+                               a.T @ np.asarray(u), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,k", [(513, 40), (64, 5), (256, 33)])
+def test_pallas_gram_matches_dense(n, k):
+    u = jax.random.normal(jax.random.PRNGKey(n + k), (n, k))
+    got = get_backend("pallas-bsr").gram(u)
+    assert got.dtype == u.dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(u.T @ u),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_pallas_spmm_t_bf16():
+    rng = np.random.default_rng(3)
+    a = _rand_sparse(rng, 128, 96)
+    op = bsr_operand(a, bm=32, bk=32, dtype=np.float32)
+    op = BSROperand(
+        BSR(op.bsr.tiles.astype(jnp.bfloat16), op.bsr.block_cols, op.bsr.shape),
+        BSR(op.bsr_t.tiles.astype(jnp.bfloat16), op.bsr_t.block_cols,
+            op.bsr_t.shape),
+        op.shape)
+    u = jnp.asarray(rng.standard_normal((128, 16)), dtype=jnp.bfloat16)
+    out = bsr_spmm_t(op, u, interpret=True)
+    expect = a.T.astype(np.float32) @ np.asarray(u, dtype=np.float32)
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32), expect,
+                               rtol=5e-2, atol=1e-1)
+
+
+def test_pallas_handles_cap_overflow_rows(corpus):
+    """SpCSR built with a tight cap (overflowing rows truncated to their
+    largest entries) still round-trips through the BSR operand exactly."""
+    a_dense = np.asarray(to_dense(corpus))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        tight = from_scipy(sps.csr_matrix(a_dense), cap=8)
+    op = get_backend("pallas-bsr").prepare(tight)
+    np.testing.assert_allclose(np.asarray(bsr_to_dense(op.bsr)),
+                               np.asarray(to_dense(tight)), rtol=1e-6)
+    u = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (a_dense.shape[0], 4)), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(bsr_spmm_t(op, u, interpret=True)),
+        np.asarray(to_dense(tight)).T @ np.asarray(u), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Tile-wise BSR ingest
+# ---------------------------------------------------------------------------
+
+def test_bsr_from_scipy_matches_from_dense():
+    rng = np.random.default_rng(7)
+    a = _rand_sparse(rng, 257, 129)
+    b1 = bsr_from_dense(a, bm=32, bk=32)
+    b2 = bsr_from_scipy(sps.csr_matrix(a), bm=32, bk=32)
+    np.testing.assert_array_equal(np.asarray(b1.tiles), np.asarray(b2.tiles))
+    np.testing.assert_array_equal(np.asarray(b1.block_cols),
+                                  np.asarray(b2.block_cols))
+
+
+def test_bsr_from_scipy_bcap_keeps_largest_blocks():
+    dense = np.zeros((32, 96), np.float32)
+    dense[0, 0] = 1.0   # block (0,0), Frobenius 1
+    dense[0, 32] = 5.0  # block (0,1), Frobenius 5
+    dense[0, 64] = 3.0  # block (0,2), Frobenius 3
+    with pytest.warns(UserWarning, match="largest-Frobenius"):
+        b = bsr_from_scipy(sps.csr_matrix(dense), bm=32, bk=32, bcap=2)
+    np.testing.assert_array_equal(np.asarray(b.block_cols)[0], [1, 2])
+    kept = sorted(float(t.max()) for t in np.asarray(b.tiles)[0])
+    assert kept == [3.0, 5.0]
+
+
+def test_bsr_transpose_tile_wise_no_densify(monkeypatch):
+    """The transposed-format copy is built from occupied tiles only — the
+    old implementation round-tripped through a dense (n, m) host matrix and
+    OOMed at scale."""
+    import repro.kernels.bsr as bsr_mod
+
+    def boom(*a, **kw):
+        raise AssertionError("bsr_transpose densified the matrix")
+
+    monkeypatch.setattr(bsr_mod, "bsr_to_dense", boom)
+    monkeypatch.setattr(bsr_mod, "bsr_from_dense", boom)
+    rng = np.random.default_rng(1)
+    a = _rand_sparse(rng, 200, 150)
+    b = bsr_from_dense(a, bm=32, bk=32)
+    monkeypatch.undo()  # only the transpose itself is under test
+    monkeypatch.setattr(bsr_mod, "bsr_to_dense", boom)
+    at = bsr_transpose(b)
+    monkeypatch.undo()
+    np.testing.assert_allclose(np.asarray(bsr_to_dense(at)), a.T)
+
+
+def test_bsr_transpose_bcap_keeps_largest_tiles():
+    """Explicit-bcap truncation follows the same keep-largest-Frobenius
+    policy (with a warning) as bsr_from_scipy, not silent first-i-wins."""
+    dense = np.zeros((96, 32), np.float32)
+    dense[0, 0] = 1.0   # source block (0,0) -> dest row-block 0, i=0
+    dense[32, 0] = 5.0  # source block (1,0) -> i=1
+    dense[64, 0] = 3.0  # source block (2,0) -> i=2
+    b = bsr_from_dense(dense, bm=32, bk=32)
+    with pytest.warns(UserWarning, match="largest-Frobenius"):
+        at = bsr_transpose(b, bcap=2)
+    np.testing.assert_array_equal(np.asarray(at.block_cols)[0], [1, 2])
+    expect = dense.T.copy()
+    expect[:, :32] = 0  # the norm-1 tile is the one dropped
+    np.testing.assert_allclose(np.asarray(bsr_to_dense(at)), expect)
+
+
+def test_sequential_and_distributed_reject_bsr_operand(corpus):
+    op = get_backend("pallas-bsr").prepare(corpus)
+    for solver in ("sequential", "distributed"):
+        model = EnforcedNMF(NMFConfig(k=5, iters=3, solver=solver,
+                                      sparsity=Sparsity(t_u=55)))
+        with pytest.raises(TypeError, match="does not support BSR"):
+            model.fit(op)
+
+
+def test_bsr_relative_error_matches_dense(corpus):
+    from repro.core.nmf import _relative_error, _sqnorm
+
+    a = np.asarray(to_dense(corpus))
+    op = get_backend("pallas-bsr").prepare(corpus)
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.random((300, 5)), dtype=jnp.float32)
+    v = jnp.asarray(rng.random((200, 5)), dtype=jnp.float32)
+    got = float(_relative_error(op, u, v))
+    expect = float(np.linalg.norm(a - np.asarray(u) @ np.asarray(v).T)
+                   / np.linalg.norm(a))
+    np.testing.assert_allclose(got, expect, rtol=1e-5)
+
+
+def test_bsr_transpose_empty_and_huge_logical_shape():
+    """A matrix whose dense form would be 1.6 GB transposes instantly when
+    only a handful of blocks are occupied."""
+    m = sps.coo_matrix(
+        (np.ones(3, np.float32), ([5, 20000 - 1, 9000], [17, 3, 19999])),
+        shape=(20000, 20000))
+    b = bsr_from_scipy(m, bm=128, bk=128)
+    at = bsr_transpose(b)
+    assert at.shape == (20000, 20000)
+    assert int(at.nnz()) == 3
+
+
+# ---------------------------------------------------------------------------
+# Sparse-ingest truncation policy (the corpus-corruption bugfixes)
+# ---------------------------------------------------------------------------
+
+def test_from_scipy_keeps_largest_magnitude_on_overflow():
+    row = np.array([[1.0, -9.0, 3.0, -5.0, 2.0, 0.5]], np.float32)
+    with pytest.warns(UserWarning, match="largest-magnitude"):
+        sp = from_scipy(sps.csr_matrix(row), cap=3)
+    # the 3 largest magnitudes survive: -9, -5, 3 (the old code kept the
+    # first 3 in column order — 1, -9, 3 — silently dropping the -5)
+    got = np.asarray(to_dense(sp))[0]
+    np.testing.assert_array_equal(got, [0, -9.0, 3.0, -5.0, 0, 0])
+    assert sp.cap == 3
+
+
+def test_from_coo_vectorized_matches_dense_accumulation():
+    rng = np.random.default_rng(0)
+    nnz = 500
+    rows = rng.integers(0, 40, nnz)
+    cols = rng.integers(0, 30, nnz)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    sp = from_coo(rows, cols, vals, (40, 30))
+    dense = np.zeros((40, 30), np.float32)
+    np.add.at(dense, (rows, cols), vals)
+    np.testing.assert_allclose(np.asarray(to_dense(sp)), dense,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_from_scipy_accepts_bool_matrices():
+    """Regression: the magnitude sort key must not apply unary minus to a
+    bool array (numpy rejects it) — indicator/adjacency matrices ingest."""
+    from repro.sparse import to_scipy
+
+    dense = np.random.default_rng(0).random((10, 8)) > 0.6
+    sp = from_scipy(sps.csr_matrix(dense))
+    np.testing.assert_array_equal(to_scipy(sp).toarray(), dense)
+
+
+def test_from_coo_overflow_keeps_largest():
+    with pytest.warns(UserWarning, match="largest-magnitude"):
+        sp = from_coo([0, 0, 0, 0], [0, 1, 2, 3], [1.0, -9.0, 3.0, -5.0],
+                      (2, 4), cap=2)
+    got = np.asarray(to_dense(sp))[0]
+    np.testing.assert_array_equal(got, [0, -9.0, 0, -5.0])
+
+
+# ---------------------------------------------------------------------------
+# Distributed sharding without densifying
+# ---------------------------------------------------------------------------
+
+def _shards_to_dense(vals, cols, loc_rows, loc_cols):
+    vals, cols = np.asarray(vals), np.asarray(cols)
+    r, c = vals.shape[:2]
+    out = np.zeros((r, c, loc_rows, loc_cols), np.float32)
+    for i in range(r):
+        for j in range(c):
+            for lr in range(loc_rows):
+                np.add.at(out[i, j, lr], cols[i, j, lr], vals[i, j, lr])
+    return out
+
+
+def test_distribute_csr_from_padded_matches_dense_ingest(corpus):
+    from repro.core.distributed import distribute_csr, distribute_csr_from_padded
+
+    a = np.asarray(to_dense(corpus))
+    d1 = distribute_csr(a, 2, 2)
+    d2 = distribute_csr_from_padded(corpus, 2, 2)
+    np.testing.assert_allclose(
+        _shards_to_dense(d1.values, d1.cols, 150, 100),
+        _shards_to_dense(d2.values, d2.cols, 150, 100))
+    np.testing.assert_allclose(
+        _shards_to_dense(d1.values_t, d1.cols_t, 100, 150),
+        _shards_to_dense(d2.values_t, d2.cols_t, 100, 150))
+
+
+def test_solve_distributed_spcsr_never_densifies(corpus, monkeypatch):
+    import repro.core.distributed as dist_mod
+    import repro.sparse.csr as csr_mod
+
+    def boom(*a, **kw):
+        raise AssertionError("solve_distributed densified SpCSR input")
+
+    monkeypatch.setattr(csr_mod, "to_dense", boom)
+    monkeypatch.setattr(dist_mod, "distribute_csr", boom)
+    model = EnforcedNMF(NMFConfig(k=5, iters=4, solver="distributed",
+                                  sparsity=Sparsity(t_u=55))).fit(corpus)
+    assert model.u_.shape == (300, 5)
+    assert np.isfinite(model.result_.final_error)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the Pallas BSR production path
+# ---------------------------------------------------------------------------
+
+def test_enforced_nmf_pallas_backend_matches_jnp(corpus):
+    """Acceptance: a scipy CSR corpus through EnforcedNMF(backend=
+    "pallas-bsr") runs BSR spmm/spmm_t + gram + fused epilogue end-to-end
+    (interpret mode on CPU) and its residual history matches the jnp
+    backend to <= 1e-4."""
+    from repro.sparse import to_scipy
+
+    a_scipy = to_scipy(corpus)
+    cfg = NMFConfig(k=5, iters=8, solver="enforced",
+                    sparsity=Sparsity(t_u=55, t_v=600))
+    m_jnp = EnforcedNMF(cfg).fit(a_scipy)
+    m_pal = EnforcedNMF(cfg.replace(backend="pallas-bsr")).fit(a_scipy)
+    np.testing.assert_allclose(np.asarray(m_pal.result_.residual),
+                               np.asarray(m_jnp.result_.residual), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m_pal.result_.error),
+                               np.asarray(m_jnp.result_.error), atol=1e-4)
+    assert int(jnp.sum(m_pal.u_ != 0)) <= 55 + 5
+    # fold-in and scoring work on the BSR operand too
+    v = m_pal.transform(a_scipy)
+    assert v.shape == (200, 5)
+    assert m_pal.score(a_scipy) < 1.0
+
+
+def test_pallas_backend_dense_input_roundtrip(corpus):
+    """Explicit backend="pallas-bsr" with dense input converts at ingest."""
+    a = to_dense(corpus)
+    cfg = NMFConfig(k=5, iters=5, solver="als", backend="pallas-bsr")
+    m = EnforcedNMF(cfg).fit(a)
+    m_ref = EnforcedNMF(cfg.replace(backend=None)).fit(a)
+    np.testing.assert_allclose(np.asarray(m.result_.residual),
+                               np.asarray(m_ref.result_.residual), atol=1e-4)
