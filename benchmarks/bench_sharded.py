@@ -1,0 +1,145 @@
+"""Sharded-engine benchmark: the unified ALS engine on 1x1 vs 2x2 meshes.
+
+Measures what the mesh-native execution layer costs and buys — shard
+ingest (``distribute_csr_from_padded``), compile, and the warm solve loop
+— on forced host devices, plus the single-device ``enforced`` solver as
+the no-shard_map reference.  Writes ``BENCH_sharded.json`` so the
+collective-overhead trajectory has data on every push.
+
+On CPU the forced host devices share the same cores, so 2x2 is *not*
+expected to be faster — the number that matters here is the shard_map /
+psum overhead over the 1x1 run (on a real pod the same code path scales
+the paper's Fig. 10 workload).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python benchmarks/bench_sharded.py --smoke
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import argparse
+import json
+import platform
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timed(fn, repeats=3):
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / repeats
+
+
+def bench(n: int, m: int, k: int, iters: int, grids, seed: int = 0):
+    from jax.sharding import NamedSharding
+
+    from repro.backend.sharded import make_sharded_als
+    from repro.compat import set_mesh
+    from repro.core import init_u0
+    from repro.core.distributed import distribute_csr_from_padded
+    from repro.core.topk import DistTopK
+    from repro.data import synthetic_journal_corpus
+    from repro.launch.mesh import make_nmf_mesh
+    from repro.nmf import EnforcedNMF, NMFConfig, Sparsity
+
+    a_sp, _ = synthetic_journal_corpus(n_terms=n, n_docs=m, n_journals=5,
+                                       seed=seed)
+    u0 = init_u0(jax.random.PRNGKey(2), n, k)
+    t_u = max(n * k // 50, k)
+    t_v = max(m * k // 50, k)
+
+    results = {}
+    # single-device reference: same engine, identity reductions
+    cfg = NMFConfig(k=k, iters=iters, solver="enforced",
+                    sparsity=Sparsity(t_u=t_u, t_v=t_v), track_error=False)
+    model = EnforcedNMF(cfg)
+    t0 = time.perf_counter()
+    model.fit(a_sp, u0=u0)
+    jax.block_until_ready(model.u_)
+    results["enforced-1dev"] = {
+        "fit_s": time.perf_counter() - t0,
+        "final_error": float(model.score(a_sp)),
+    }
+
+    for r, c in grids:
+        if len(jax.devices()) < r * c or n % r or m % c:
+            results[f"{r}x{c}"] = {"status": "skipped"}
+            continue
+        mesh = make_nmf_mesh(r, c)
+        t0 = time.perf_counter()
+        dist = distribute_csr_from_padded(a_sp, r, c)
+        ingest_s = time.perf_counter() - t0
+        run = make_sharded_als(
+            mesh, ("data",), "model",
+            sparsify_u=DistTopK(t_u, ("data",)),
+            sparsify_v=DistTopK(t_v, ("model",)),
+            track_error=False,
+        )
+        a_spec, u_spec, _ = run.specs
+        a_sh = NamedSharding(mesh, a_spec)
+        dist = jax.tree_util.tree_map(lambda x: jax.device_put(x, a_sh), dist)
+        u0d = jax.device_put(u0, NamedSharding(mesh, u_spec))
+        with set_mesh(mesh):
+            t0 = time.perf_counter()
+            res = run(dist, u0d, iters)
+            jax.block_until_ready(res.u)
+            first_s = time.perf_counter() - t0
+            solve_s = _timed(lambda: run(dist, u0d, iters).u)
+        results[f"{r}x{c}"] = {
+            "ingest_s": ingest_s,
+            "compile_plus_first_run_s": first_s,
+            "solve_s": solve_s,
+            "per_iter_ms": solve_s / iters * 1e3,
+            "final_residual": float(res.residual[-1]),
+            "max_nnz": int(res.max_nnz),
+        }
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus so the shard_map path runs on every "
+                         "CI push with 4 forced host devices")
+    ap.add_argument("--full", action="store_true",
+                    help="large-synthetic corpus (paper Fig. 10 scale)")
+    ap.add_argument("--out", default="BENCH_sharded.json")
+    args = ap.parse_args(argv)
+
+    if args.full:
+        n, m, k, iters = 25_000, 12_000, 16, 10
+    elif args.smoke:
+        n, m, k, iters = 256, 128, 4, 4
+    else:
+        n, m, k, iters = 2048, 1024, 8, 8
+    grids = [(1, 1), (2, 2)]
+    results = bench(n, m, k, iters, grids)
+
+    payload = {
+        "shape": {"n": n, "m": m, "k": k, "iters": iters},
+        "grids": ["%dx%d" % g for g in grids],
+        "devices": len(jax.devices()),
+        "device_kind": jax.default_backend(),
+        "platform": platform.platform(),
+        "jax_version": jax.__version__,
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(json.dumps(payload, indent=2))
+
+    ok = all("final_residual" in r or r.get("status") == "skipped"
+             for name, r in results.items() if name != "enforced-1dev")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,17 +12,23 @@ Registered backends: ``jnp-dense`` (XLA dense baseline), ``jnp-csr``
 (padded-CSR gather/scatter reference), ``pallas-bsr`` (MXU streaming-tile
 kernels).  ``NMFConfig(backend=...)`` threads the choice through the
 solver family; ``None`` auto-selects from the operand type and device.
+
+Sharding composes on top rather than picking a backend: a
+:class:`~repro.backend.sharded.ShardedBackend` wraps any local backend
+with the mesh collectives (``from repro.backend.sharded import
+make_sharded_als``), so "distributed" is an execution property, not a
+registry entry.
 """
 from repro.backend.base import (
-    MatmulBackend, available_backends, default_backend_name, get_backend,
-    register_backend, resolve_backend, select_backend,
+    LocalExecution, MatmulBackend, available_backends, default_backend_name,
+    get_backend, register_backend, resolve_backend, select_backend,
 )
 from repro.backend import jnp_backends as _jnp_backends  # noqa: F401 — registers
 from repro.backend import pallas_bsr as _pallas_bsr      # noqa: F401 — registers
 from repro.kernels.bsr import BSROperand
 
 __all__ = [
-    "MatmulBackend", "BSROperand", "available_backends",
+    "LocalExecution", "MatmulBackend", "BSROperand", "available_backends",
     "default_backend_name", "get_backend", "register_backend",
     "resolve_backend", "select_backend",
 ]

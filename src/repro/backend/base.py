@@ -8,6 +8,15 @@ registry so the Pallas MXU kernels, the padded-CSR gather/scatter
 reference, and the dense baseline are interchangeable behind one
 ``NMFConfig(backend=...)`` switch.
 
+Backends additionally own the *execution topology*: the ALS engine's
+residual / error / nnz bookkeeping runs through the reduction hooks
+``reduce_u`` / ``reduce_v`` / ``reduce_all`` plus the metric hooks
+``sqnorm`` / ``relative_error``.  For single-device backends
+(:class:`LocalExecution`) the reductions are identity, so the engine is
+bit-for-bit the legacy single-device loop; under
+:class:`repro.backend.sharded.ShardedBackend` they become mesh ``psum``s
+and the *same* engine runs SPMD over a device grid.
+
 Backends are stateless singletons (hashable, compared by identity) so they
 can ride through ``jax.jit`` static arguments; the matrix operand itself is
 a pytree (dense array, :class:`~repro.sparse.csr.SpCSR`, or
@@ -60,8 +69,58 @@ class MatmulBackend(Protocol):
         ...
 
     def gram(self, x: jax.Array) -> jax.Array:
-        """X^T X -> (k, k)."""
+        """X^T X -> (k, k) — the *local* Gram; the engine applies
+        ``reduce_u`` / ``reduce_v`` on top (identity on one device)."""
         ...
+
+    def reduce_u(self, x: jax.Array) -> jax.Array:
+        """Sum ``x`` over U's shard axes (identity on one device)."""
+        ...
+
+    def reduce_v(self, x: jax.Array) -> jax.Array:
+        """Sum ``x`` over V's shard axis (identity on one device)."""
+        ...
+
+    def reduce_all(self, x: jax.Array) -> jax.Array:
+        """Sum ``x`` over every shard axis (identity on one device)."""
+        ...
+
+    def sqnorm(self, a) -> jax.Array:
+        """Global ``||A||_F^2`` of the operand."""
+        ...
+
+    def relative_error(self, a, u: jax.Array, v: jax.Array,
+                       a_sqnorm: jax.Array) -> jax.Array:
+        """Global ``||A - U V^T||_F / ||A||_F``."""
+        ...
+
+
+class LocalExecution:
+    """Single-device execution hooks shared by the local backends.
+
+    Reductions are identity (there is nothing to reduce over) and the
+    metric hooks delegate to the operand-type dispatch in
+    :mod:`repro.core.nmf`, so every pre-sharding result stays bit-for-bit.
+    """
+
+    def reduce_u(self, x):
+        return x
+
+    def reduce_v(self, x):
+        return x
+
+    def reduce_all(self, x):
+        return x
+
+    def sqnorm(self, a):
+        from repro.core.nmf import _sqnorm
+
+        return _sqnorm(a)
+
+    def relative_error(self, a, u, v, a_sqnorm):
+        from repro.core.nmf import _relative_error
+
+        return _relative_error(a, u, v, a_sqnorm)
 
 
 _REGISTRY: Dict[str, MatmulBackend] = {}

@@ -6,11 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.backend.base import register_backend
+from repro.backend.base import LocalExecution, register_backend
 from repro.sparse.csr import SpCSR, from_dense, from_scipy, spmm, spmm_t
 
 
-class JnpDenseBackend:
+class JnpDenseBackend(LocalExecution):
     """XLA dense products — the oracle and the small-matrix baseline."""
 
     name = "jnp-dense"
@@ -41,7 +41,7 @@ class JnpDenseBackend:
         return x.T @ x
 
 
-class JnpCsrBackend:
+class JnpCsrBackend(LocalExecution):
     """Padded-CSR gather/scatter products on ``SpCSR`` operands."""
 
     name = "jnp-csr"

@@ -11,13 +11,13 @@ from __future__ import annotations
 
 import jax
 
-from repro.backend.base import register_backend
+from repro.backend.base import LocalExecution, register_backend
 from repro.kernels.bsr import BSROperand, bsr_operand
 from repro.kernels.ops import gram_matrix, spmm, spmm_t
 from repro.sparse.csr import SpCSR, to_scipy
 
 
-class PallasBsrBackend:
+class PallasBsrBackend(LocalExecution):
     """MXU block-sparse products over the two-orientation BSR operand."""
 
     name = "pallas-bsr"

@@ -1,0 +1,221 @@
+"""Mesh-native execution layer: any local matmul backend, sharded.
+
+Sharding is an execution property of the one ALS engine, not a second
+algorithm.  :class:`ShardedBackend` wraps a *local* backend (``jnp-csr``
+today; ``pallas-bsr`` once BSR shard ingest lands) with the mesh
+collectives of DESIGN.md §4:
+
+* ``matmul`` / ``matmul_t`` run the inner backend on the local shard (both
+  orientations are stored, so the transpose product is scatter-free) and
+  ``psum`` the partial products over the contracted mesh axis;
+* ``gram`` stays local — the engine reduces it with ``reduce_u`` /
+  ``reduce_v``, which here are ``psum``s over the factor's shard axes;
+* ``sqnorm`` / ``relative_error`` psum the local contributions, so the
+  engine's per-iteration traces are the global quantities.
+
+One iteration of Algorithm 2 then costs exactly four psums of useful data —
+  G_U   = psum_R(U_i^T U_i)                (k x k)
+  V_j   = relu( psum_R(A_ij^T U_i) G_U^{-1} ) , top-t_v
+  G_V   = psum_C(V_j^T V_j)                (k x k)
+  U_i   = relu( psum_C(A_ij V_j) G_V^{-1} ) , top-t_u
+— plus one fused (nbins,)-vector psum per enforced factor for the
+histogram top-t threshold (:class:`repro.core.topk.DistTopK`).
+
+No all-gather of A, U, or V ever occurs; peak per-device memory is
+nnz(A)/(R*C) * 2 slots + (n/R + m/C) * k.
+
+:func:`make_sharded_als` is the lowering shim: it shard_maps the *unified*
+:func:`repro.core.nmf.als_nmf` over a mesh, handing it a :class:`ShardView`
+of the local shards and a :class:`ShardedBackend` carrying the axis names.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.backend.base import MatmulBackend, get_backend
+from repro.compat import SHARD_MAP_NO_CHECK, shard_map as _shard_map
+from repro.core.distributed import DistCSR, make_dist_specs
+from repro.sparse.csr import SpCSR
+
+__all__ = ["ShardView", "ShardedBackend", "make_sharded_als"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardView:
+    """One device's view of the sharded operand, inside a shard_map.
+
+    ``fwd`` is the local A_ij block in the inner backend's native format
+    (column ids are *local*); ``tsp`` is the same block transposed, stored
+    explicitly so A^T @ U is a scatter-free forward product.  ``shape`` is
+    the local logical block shape — the engine sizes V's local shard from
+    it.
+    """
+
+    fwd: SpCSR
+    tsp: SpCSR
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.fwd.shape
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedBackend:
+    """Wrap a local :class:`MatmulBackend` with mesh collectives.
+
+    Frozen dataclass over (inner backend singleton, axis names): hashable
+    by value, so an instance rides through the engine's jit-static
+    ``backend`` argument.  Must execute inside a shard_map over a mesh
+    defining ``rows_axes`` (U's shard axes) and ``cols_axis`` (V's).
+    """
+
+    inner: MatmulBackend
+    rows_axes: Tuple[str, ...]
+    cols_axis: str
+
+    fuse_epilogue = False
+
+    @property
+    def name(self) -> str:
+        return f"sharded[{self.inner.name}]"
+
+    # -- operand ingest ------------------------------------------------------
+
+    def accepts(self, a) -> bool:
+        return isinstance(a, ShardView)
+
+    def prepare(self, a, dtype=None):
+        if not isinstance(a, ShardView):
+            raise TypeError(
+                "ShardedBackend consumes ShardView shards built inside a "
+                "shard_map; distribute the matrix first (see "
+                "repro.core.distributed.distribute_csr_from_padded)")
+        return a
+
+    # -- the three products (local product + psum over the contracted axis) --
+
+    def matmul(self, a: ShardView, v: jax.Array) -> jax.Array:
+        """A @ V: local A_ij @ V_j summed over the column blocks."""
+        return jax.lax.psum(self.inner.matmul(a.fwd, v), self.cols_axis)
+
+    def matmul_t(self, a: ShardView, u: jax.Array) -> jax.Array:
+        """A^T @ U: forward product on the transposed orientation
+        (scatter-free), summed over the row blocks."""
+        return jax.lax.psum(self.inner.matmul(a.tsp, u), self.rows_axes)
+
+    def gram(self, x: jax.Array) -> jax.Array:
+        return self.inner.gram(x)
+
+    # -- reduction hooks (the engine's bookkeeping becomes global) -----------
+
+    def reduce_u(self, x: jax.Array) -> jax.Array:
+        return jax.lax.psum(x, self.rows_axes)
+
+    def reduce_v(self, x: jax.Array) -> jax.Array:
+        return jax.lax.psum(x, self.cols_axis)
+
+    def reduce_all(self, x: jax.Array) -> jax.Array:
+        return jax.lax.psum(jax.lax.psum(x, self.rows_axes), self.cols_axis)
+
+    # -- metrics -------------------------------------------------------------
+
+    def sqnorm(self, a: ShardView) -> jax.Array:
+        from repro.core.nmf import _sqnorm
+
+        return self.reduce_all(_sqnorm(a.fwd))
+
+    def relative_error(self, a: ShardView, u: jax.Array, v: jax.Array,
+                       a_sqnorm: jax.Array) -> jax.Array:
+        """E = ||A - U V^T||_F / ||A||_F from local contributions:
+        <A, UV^T> on the local nonzeros (local ids index the local factor
+        shards directly) and the Gram cross term from the psummed Grams."""
+        if not isinstance(a.fwd, SpCSR):
+            raise TypeError(
+                f"sharded relative_error needs SpCSR shards, got "
+                f"{type(a.fwd).__name__}")
+        values, cols = a.fwd.values, a.fwd.cols
+        rows_loc = jnp.broadcast_to(
+            jnp.arange(values.shape[0])[:, None], cols.shape)
+        dots = jnp.sum(u[rows_loc] * v[cols], axis=-1)
+        cross = self.reduce_all(jnp.sum(values * dots))
+        gu = self.reduce_u(u.T @ u)
+        gv = self.reduce_v(v.T @ v)
+        err_sq = jnp.maximum(a_sqnorm - 2.0 * cross + jnp.sum(gu * gv), 0.0)
+        return jnp.sqrt(err_sq / jnp.maximum(a_sqnorm, 1e-30))
+
+
+#: local backends whose operands ShardView can currently carry
+_SHARDABLE_INNER = ("jnp-csr",)
+
+
+def make_sharded_als(
+    mesh: jax.sharding.Mesh,
+    rows_axes: Tuple[str, ...],
+    cols_axis: str,
+    *,
+    sparsify_u=None,
+    sparsify_v=None,
+    track_error: bool = True,
+    inner: str = "jnp-csr",
+):
+    """shard_map the unified ALS engine over ``mesh``.
+
+    Returns ``run(a: DistCSR, u0, iters) -> NMFResult`` with u0 (n, k)
+    sharded ``P(rows_axes, None)`` and outputs (u sharded over rows, v over
+    cols, replicated scalar traces).  ``sparsify_u`` / ``sparsify_v``
+    should be mesh-aware (:class:`repro.core.topk.DistTopK`) or ``None``.
+    ``run.shard_fn(iters)`` exposes the un-jitted shard-mapped callable for
+    AOT lowering (the pod dry-run).
+    """
+    if inner not in _SHARDABLE_INNER:
+        raise ValueError(
+            f"ShardedBackend currently wraps {_SHARDABLE_INNER}, got "
+            f"{inner!r} (BSR shard ingest is an open roadmap item)")
+    be = ShardedBackend(get_backend(inner), tuple(rows_axes), cols_axis)
+    a_spec, u_spec, v_spec = make_dist_specs(be.rows_axes, cols_axis)
+
+    from repro.core.nmf import NMFResult, als_nmf
+
+    rep = P()
+    out_specs = NMFResult(u=u_spec, v=v_spec, residual=rep, error=rep,
+                          max_nnz=rep, nnz_u=rep, nnz_v=rep)
+
+    @functools.lru_cache(maxsize=None)
+    def shard_fn(iters: int):
+        def step_fn(values, cols, values_t, cols_t, u0):
+            n_loc, m_loc = values.shape[2], values_t.shape[2]
+            local = ShardView(
+                fwd=SpCSR(values[0, 0], cols[0, 0], (n_loc, m_loc)),
+                tsp=SpCSR(values_t[0, 0], cols_t[0, 0], (m_loc, n_loc)),
+            )
+            return als_nmf(local, u0, iters=iters, sparsify_u=sparsify_u,
+                           sparsify_v=sparsify_v, track_error=track_error,
+                           backend=be)
+
+        return _shard_map(
+            step_fn,
+            mesh=mesh,
+            in_specs=(a_spec, a_spec, a_spec, a_spec, u_spec),
+            out_specs=out_specs,
+            **SHARD_MAP_NO_CHECK,
+        )
+
+    @functools.lru_cache(maxsize=None)
+    def jitted(iters: int):
+        return jax.jit(shard_fn(iters))
+
+    def run(a: DistCSR, u0: jax.Array, iters: int):
+        return jitted(iters)(a.values, a.cols, a.values_t, a.cols_t, u0)
+
+    run.shard_fn = shard_fn
+    run.jitted = jitted
+    run.backend = be
+    run.specs = (a_spec, u_spec, v_spec)
+    return run

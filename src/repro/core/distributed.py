@@ -1,4 +1,4 @@
-"""Distributed Enforced-Sparsity ALS over a (pod, data, model) mesh.
+"""Distributed ingest for the mesh-native ALS engine.
 
 Layout (DESIGN.md §4):
 
@@ -8,37 +8,26 @@ Layout (DESIGN.md §4):
 * U (n x k): row-sharded over R, replicated over C.
 * V (m x k): row-sharded over C, replicated over R.
 
-One iteration of Algorithm 2 then costs exactly four psums of useful data —
-  G_U   = psum_R(U_i^T U_i)                (k x k)
-  V_j   = relu( psum_R(A_ij^T U_i) G_U^{-1} ) , top-t_v
-  G_V   = psum_C(V_j^T V_j)                (k x k)
-  U_i   = relu( psum_C(A_ij V_j) G_V^{-1} ) , top-t_u
-— plus the distributed top-t threshold selection, whose bisection counts are
-*batched into a single fused vector psum per factor* (num_steps sequential
-scalar psums would be latency-bound at 512 devices; see
-``_dist_topk_threshold``: we instead run the bisection locally against the
-globally-psummed histogram of magnitudes — one (B,)-vector psum total).
-
-No all-gather of A, U, or V ever occurs; peak per-device memory is
-nnz(A)/(R*C) * 2 slots + (n/R + m/C) * k.
+This module is host-side only: it builds the :class:`DistCSR` shard grid
+(nnz-proportional packing, never materializing a dense (n, m) matrix from
+sparse input) and the PartitionSpecs.  The execution itself is the shared
+ALS engine (:func:`repro.core.nmf.als_nmf`) run under a shard_map with a
+:class:`repro.backend.sharded.ShardedBackend` — see
+:func:`repro.backend.sharded.make_sharded_als`; there is no separate
+distributed solver loop anymore.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.nmf import solve_gram
-
 __all__ = ["DistCSR", "distribute_csr", "distribute_csr_from_padded",
-           "dist_enforced_als", "make_dist_specs"]
-
-from repro.compat import SHARD_MAP_NO_CHECK, shard_map as _shard_map
+           "make_dist_specs"]
 
 
 # ---------------------------------------------------------------------------
@@ -58,39 +47,6 @@ class DistCSR:
     values_t: jax.Array
     cols_t: jax.Array
     shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
-
-
-def distribute_csr(a_dense: np.ndarray, r: int, c: int) -> DistCSR:
-    """Host-side: split a dense (n, m) matrix into an (R, C) grid of local
-    padded-CSR shards (rows padded to n/R etc.).  Test/driver utility — real
-    ingest would build shards directly from the data pipeline."""
-    a = np.asarray(a_dense)
-    n, m = a.shape
-    n_loc, m_loc = -(-n // r), -(-m // c)
-    ap = np.pad(a, ((0, n_loc * r - n), (0, m_loc * c - m)))
-
-    def pack(mat_grid):  # list[R][C] of (rows, cap) local CSR
-        cap = max(1, max(int((blk != 0).sum(axis=1).max(initial=0)) for row in mat_grid for blk in row))
-        rr, cc = len(mat_grid), len(mat_grid[0])
-        rows = mat_grid[0][0].shape[0]
-        vals = np.zeros((rr, cc, rows, cap), np.float32)
-        cols = np.zeros((rr, cc, rows, cap), np.int32)
-        for i in range(rr):
-            for j in range(cc):
-                blk = mat_grid[i][j]
-                for rloc in range(rows):
-                    nz = np.nonzero(blk[rloc])[0]
-                    vals[i, j, rloc, : len(nz)] = blk[rloc, nz]
-                    cols[i, j, rloc, : len(nz)] = nz
-        return vals, cols
-
-    grid = [[ap[i * n_loc:(i + 1) * n_loc, j * m_loc:(j + 1) * m_loc] for j in range(c)] for i in range(r)]
-    grid_t = [[grid[i][j].T for j in range(c)] for i in range(r)]
-    vals, cols = pack(grid)
-    vals_t, cols_t = pack(grid_t)
-    return DistCSR(
-        jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(vals_t), jnp.asarray(cols_t), (n, m)
-    )
 
 
 def _pack_coo_shards(rows, cols, vals, r: int, c: int, n_loc: int,
@@ -132,20 +88,13 @@ def _pack_coo_shards(rows, cols, vals, r: int, c: int, n_loc: int,
     return vals_arr, cols_arr
 
 
-def distribute_csr_from_padded(a, r: int, c: int) -> DistCSR:
-    """Build the (R, C) shard grid directly from a padded-CSR ``SpCSR`` —
-    host work and temporaries proportional to nnz (plus the padded shard
-    arrays themselves), never materializing the dense (n, m) matrix (an
-    O(n*m) driver allocation at exactly the scale the distributed solver
-    exists for)."""
-    n, m = a.shape
+def _distribute_coo(rows_e, cols_e, vals_e, n: int, m: int,
+                    r: int, c: int) -> DistCSR:
+    """Shared COO -> (R, C) shard-grid path for every ingest front door."""
     n_loc, m_loc = -(-n // r), -(-m // c)
-    values = np.asarray(a.values)
-    cols = np.asarray(a.cols)
-    mask = values != 0
-    rows_e = np.broadcast_to(np.arange(n)[:, None], values.shape)[mask]
-    cols_e = cols[mask].astype(np.int64)
-    vals_e = values[mask].astype(np.float32)
+    rows_e = np.asarray(rows_e, dtype=np.int64)
+    cols_e = np.asarray(cols_e, dtype=np.int64)
+    vals_e = np.asarray(vals_e, dtype=np.float32)
     vals_arr, cols_arr = _pack_coo_shards(
         rows_e, cols_e, vals_e, r, c, n_loc, m_loc, transposed=False)
     vals_t, cols_t = _pack_coo_shards(
@@ -156,173 +105,34 @@ def distribute_csr_from_padded(a, r: int, c: int) -> DistCSR:
     )
 
 
+def distribute_csr(a_dense: np.ndarray, r: int, c: int) -> DistCSR:
+    """Host-side: split a dense (n, m) matrix into an (R, C) grid of local
+    padded-CSR shards.  Thin dense->COO adapter over the vectorized
+    :func:`_pack_coo_shards` path (test/driver utility — real ingest comes
+    from :func:`distribute_csr_from_padded` or the data pipeline)."""
+    a = np.asarray(a_dense)
+    n, m = a.shape
+    rows_e, cols_e = np.nonzero(a)
+    return _distribute_coo(rows_e, cols_e, a[rows_e, cols_e], n, m, r, c)
+
+
+def distribute_csr_from_padded(a, r: int, c: int) -> DistCSR:
+    """Build the (R, C) shard grid directly from a padded-CSR ``SpCSR`` —
+    host work and temporaries proportional to nnz (plus the padded shard
+    arrays themselves), never materializing the dense (n, m) matrix (an
+    O(n*m) driver allocation at exactly the scale the distributed solver
+    exists for)."""
+    n, m = a.shape
+    values = np.asarray(a.values)
+    cols = np.asarray(a.cols)
+    mask = values != 0
+    rows_e = np.broadcast_to(np.arange(n)[:, None], values.shape)[mask]
+    return _distribute_coo(rows_e, cols[mask], values[mask], n, m, r, c)
+
+
 def make_dist_specs(rows_axes: Tuple[str, ...], cols_axis: str):
     """PartitionSpecs for (A-shard arrays, U, V) under shard_map."""
     a_spec = P(rows_axes, cols_axis, None, None)
     u_spec = P(rows_axes, None)   # replicated over cols_axis
     v_spec = P(cols_axis, None)   # replicated over rows_axes
     return a_spec, u_spec, v_spec
-
-
-# ---------------------------------------------------------------------------
-# Local sparse products (scatter-free in the transpose direction)
-# ---------------------------------------------------------------------------
-
-def _local_spmm(values, cols, x, chunk: int = 8, compute_dtype=jnp.bfloat16):
-    """(rows, cap) padded CSR @ (m_loc, k) -> (rows, k).
-
-    Accumulates over the capacity dimension in chunks instead of
-    materializing the full (rows, cap, k) gather (8 GB/device at the
-    large-synthetic scale — §Perf pair 3), and gathers in bf16 with fp32
-    accumulation (halves the inherent nnz*k gather traffic).  Sparse ALS is
-    memory-bound by construction (~0.5 flop/byte), so these constant
-    factors are the whole game.
-    """
-    rows, cap = values.shape
-    k = x.shape[1]
-    xc = x.astype(compute_dtype)
-    vc = values.astype(compute_dtype)
-    n_chunks = max(cap // chunk, 1)
-    while cap % n_chunks:
-        n_chunks -= 1
-    cw = cap // n_chunks
-
-    def body(i, acc):
-        sl_v = jax.lax.dynamic_slice(vc, (0, i * cw), (rows, cw))
-        sl_c = jax.lax.dynamic_slice(cols, (0, i * cw), (rows, cw))
-        part = jnp.einsum("rc,rck->rk", sl_v, xc[sl_c],
-                          preferred_element_type=jnp.float32)
-        return acc + part
-
-    return jax.lax.fori_loop(0, n_chunks, body, jnp.zeros((rows, k), jnp.float32))
-
-
-# ---------------------------------------------------------------------------
-# Distributed top-t via histogram threshold selection
-# ---------------------------------------------------------------------------
-
-def _dist_topk_threshold(x, t: int, repl_axis: str, nbins: int = 8192):
-    """Find tau with global count(|x| >= tau) ~ t, where the global matrix is
-    the concatenation of the distinct shards along ``repl_axis``'s complement.
-
-    Single round-trip: build a local histogram of |x| over log-spaced bins,
-    psum it over the sharded axis, then scan the global histogram for the
-    bin whose cumulative count reaches t.  Resolution is one bin (~0.2% in
-    magnitude with 8192 log bins) — well below ALS noise; the exact variant
-    exists for tests.
-    """
-    absx = jnp.abs(x)
-    gmax = jax.lax.pmax(jnp.max(absx), repl_axis)
-    # log-spaced bins in [gmax*1e-12, gmax]; direct log-bucketing is a
-    # single elementwise pass (searchsorted's binary search made ~13 full
-    # passes over the factor — §Perf pair 3 iter 2)
-    log_lo = jnp.log(gmax * 1e-12 + 1e-38)
-    log_hi = jnp.log(gmax + 1e-38)
-    step = (log_hi - log_lo) / (nbins - 1)
-    logx = jnp.log(jnp.maximum(absx.ravel(), 1e-38))
-    idx = jnp.clip(jnp.ceil((logx - log_lo) / step), 0, nbins).astype(jnp.int32)
-    hist = jnp.zeros((nbins + 1,), jnp.int32).at[idx].add(
-        (absx.ravel() > 0).astype(jnp.int32)
-    )
-    hist = jax.lax.psum(hist, repl_axis)
-    # count of elements >= edges[b] is suffix sum of bins > b
-    suffix = jnp.cumsum(hist[::-1])[::-1]
-    counts_ge = suffix[1:]  # counts_ge[b] = # elements with |x| >= edges[b]
-    # pick the largest tau whose count >= t
-    ok = counts_ge >= t
-    bidx = jnp.max(jnp.where(ok, jnp.arange(nbins), -1))
-    tau = jnp.where(bidx < 0, jnp.float32(0.0),
-                    jnp.exp(log_lo + bidx.astype(jnp.float32) * step))
-    return tau.astype(x.dtype)
-
-
-# ---------------------------------------------------------------------------
-# The distributed ALS engine
-# ---------------------------------------------------------------------------
-
-def dist_enforced_als(
-    mesh: jax.sharding.Mesh,
-    rows_axes: Tuple[str, ...],
-    cols_axis: str,
-    t_u: Optional[int] = None,
-    t_v: Optional[int] = None,
-    iters: int = 50,
-    track_error: bool = True,
-):
-    """Return a jit-compiled function (a: DistCSR, u0, v0) -> (u, v, resid,
-    err) running Algorithm 2 on the given mesh.  u0 is (n, k) sharded
-    P(rows_axes, None); v0 (m, k) sharded P(cols_axis, None).
-    """
-    a_spec, u_spec, v_spec = make_dist_specs(rows_axes, cols_axis)
-
-    def step_fn(a_values, a_cols, a_values_t, a_cols_t, u0: jax.Array, v0: jax.Array):
-        values, cols = a_values[0, 0], a_cols[0, 0]
-        values_t, cols_t = a_values_t[0, 0], a_cols_t[0, 0]
-        a_sqnorm = jax.lax.psum(
-            jax.lax.psum(jnp.sum(values**2), rows_axes), cols_axis
-        )
-
-        def half_step_v(u):
-            gu = jax.lax.psum(u.T @ u, rows_axes)
-            partial = _local_spmm(values_t, cols_t, u)      # (m_loc, k)
-            rhs = jax.lax.psum(partial, rows_axes)
-            v = jnp.maximum(solve_gram(gu, rhs), 0.0)
-            if t_v is not None:
-                tau = _dist_topk_threshold(v, t_v, cols_axis)
-                v = jnp.where(jnp.abs(v) >= tau, v, 0.0)
-            return v
-
-        def half_step_u(v):
-            gv = jax.lax.psum(v.T @ v, cols_axis)
-            partial = _local_spmm(values, cols, v)          # (n_loc, k)
-            rhs = jax.lax.psum(partial, cols_axis)
-            u = jnp.maximum(solve_gram(gv, rhs), 0.0)
-            if t_u is not None:
-                tau = _dist_topk_threshold(u, t_u, rows_axes)
-                u = jnp.where(jnp.abs(u) >= tau, u, 0.0)
-            return u
-
-        def error_of(u, v):
-            if not track_error:
-                return jnp.float32(0.0)
-            # <A, UV^T> on local nonzeros: a_ij u_i . v_j with local ids
-            rows_loc = jnp.broadcast_to(
-                jnp.arange(values.shape[0])[:, None], cols.shape
-            )
-            dots = jnp.sum(u[rows_loc] * v[cols], axis=-1)
-            cross = jax.lax.psum(
-                jax.lax.psum(jnp.sum(values * dots), rows_axes), cols_axis
-            )
-            gu = jax.lax.psum(u.T @ u, rows_axes)
-            gv = jax.lax.psum(v.T @ v, cols_axis)
-            err_sq = jnp.maximum(a_sqnorm - 2 * cross + jnp.sum(gu * gv), 0.0)
-            return jnp.sqrt(err_sq / jnp.maximum(a_sqnorm, 1e-30))
-
-        def body(carry, _):
-            u, _v = carry
-            v = half_step_v(u)
-            u_new = half_step_u(v)
-            # relative residual: global norms via psum over rows
-            num = jax.lax.psum(jnp.sum((u_new - u) ** 2), rows_axes)
-            den = jax.lax.psum(jnp.sum(u_new**2), rows_axes)
-            r = jnp.sqrt(num) / jnp.maximum(jnp.sqrt(den), 1e-30)
-            e = error_of(u_new, v)
-            return (u_new, v), (r, e)
-
-        (u, v), (rs, es) = jax.lax.scan(body, (u0, v0), None, length=iters)
-        return u, v, rs, es
-
-    shard_fn = _shard_map(
-        step_fn,
-        mesh=mesh,
-        in_specs=(a_spec, a_spec, a_spec, a_spec, u_spec, v_spec),
-        out_specs=(u_spec, v_spec, P(), P()),
-        **SHARD_MAP_NO_CHECK,
-    )
-    jitted = jax.jit(shard_fn)
-
-    def run(a: DistCSR, u0, v0):
-        return jitted(a.values, a.cols, a.values_t, a.cols_t, u0, v0)
-
-    run.jitted = jitted  # exposes .lower() for the dry-run
-    return run

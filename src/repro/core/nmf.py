@@ -10,6 +10,13 @@ The hot-spot products A @ V / A^T @ U / X^T X dispatch through the pluggable
 matmul-backend layer (:mod:`repro.backend`): dense XLA, padded-CSR
 gather/scatter, or the Pallas BSR MXU kernels, auto-selected from the
 operand type or forced with ``backend=...``.
+
+The engine is mesh-native: all residual / error / nnz bookkeeping and the
+Gram reductions go through the backend's ``reduce_u`` / ``reduce_v`` /
+``reduce_all`` hooks, which are identity for the local backends and mesh
+``psum``s for :class:`repro.backend.sharded.ShardedBackend` — so the same
+scan loop runs single-device or SPMD inside a shard_map, with sharding as
+an execution property rather than a second algorithm.
 """
 from __future__ import annotations
 
@@ -61,7 +68,13 @@ def solve_gram(gram: jax.Array, rhs: jax.Array, ridge: float = 1e-8) -> jax.Arra
     return jax.scipy.linalg.cho_solve(cho, rhs.T).T
 
 
-def _resolve(a: Matrix, backend: Optional[str]):
+def _resolve(a: Matrix, backend):
+    """Backend for ``a``: a registry name, an already-constructed
+    :class:`~repro.backend.base.MatmulBackend` instance (how the sharded
+    execution layer injects its mesh-collective hooks), or ``None`` for
+    type-based auto-selection."""
+    if backend is not None and not isinstance(backend, str):
+        return backend
     from repro.backend import resolve_backend
 
     return resolve_backend(a, backend)
@@ -156,35 +169,45 @@ def als_nmf(
       U = relu(A V (V^T V)^{-1});    U = sparsify_u(U)
 
     ``backend`` names a registered matmul backend (``"jnp-dense"``,
-    ``"jnp-csr"``, ``"pallas-bsr"``); ``None`` auto-selects from the
-    operand type, which reproduces the legacy dispatch bit-for-bit.
+    ``"jnp-csr"``, ``"pallas-bsr"``) or is a ``MatmulBackend`` instance
+    (the sharded execution layer passes one carrying its mesh axes);
+    ``None`` auto-selects from the operand type, which reproduces the
+    legacy dispatch bit-for-bit.
+
+    All scalar bookkeeping is phrased through the backend's reduction
+    hooks, so under a shard_map the residual / error / nnz traces are the
+    *global* quantities while ``a``, ``u``, and ``v`` stay local shards.
     """
     be = _resolve(a, backend)
     n, k = u0.shape
     m = a.shape[1]
-    a_sqnorm = _sqnorm(a)
+    a_sqnorm = be.sqnorm(a)
 
     def error_of(u, v):
         if not track_error:
             return jnp.float32(0.0)
-        return _relative_error(a, u, v, a_sqnorm)
+        return be.relative_error(a, u, v, a_sqnorm)
 
     def body(carry, _):
         u, _v, max_nnz = carry
-        v = solve_gram(be.gram(u), be.matmul_t(a, u))
+        v = solve_gram(be.reduce_u(be.gram(u)), be.matmul_t(a, u))
         v = _epilogue(v, sparsify_v)
 
-        u_new = solve_gram(be.gram(v), be.matmul(a, v))
+        u_new = solve_gram(be.reduce_v(be.gram(v)), be.matmul(a, v))
         u_new = _epilogue(u_new, sparsify_u)
 
-        r = M.relative_residual(u_new, u)
+        # relative residual R = ||U_i - U_{i-1}||_F / ||U_i||_F with the
+        # squared norms reduced over U's shard axes (identity locally)
+        num = be.reduce_u(jnp.sum(jnp.square(u_new - u)))
+        den = be.reduce_u(jnp.sum(jnp.square(u_new)))
+        r = jnp.sqrt(num) / jnp.maximum(jnp.sqrt(den), 1e-30)
         e = error_of(u_new, v)
-        nu = jnp.sum(u_new != 0)
-        nv = jnp.sum(v != 0)
+        nu = be.reduce_u(jnp.sum(u_new != 0))
+        nv = be.reduce_v(jnp.sum(v != 0))
         max_nnz = jnp.maximum(max_nnz, nu + nv)
         return (u_new, v, max_nnz), (r, e, nu, nv)
 
-    init_nnz = jnp.sum(u0 != 0)
+    init_nnz = be.reduce_u(jnp.sum(u0 != 0))
     v0 = jnp.zeros((m, k), dtype=u0.dtype)
     (u, v, max_nnz), (rs, es, nus, nvs) = jax.lax.scan(
         body, (u0, v0, init_nnz.astype(jnp.int32)), None, length=iters

@@ -36,7 +36,8 @@ class SequentialResult(NamedTuple):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k2", "blocks", "iters", "t_u", "t_v", "track_error"),
+    static_argnames=("k2", "blocks", "iters", "t_u", "t_v", "track_error",
+                     "backend"),
 )
 def sequential_als_nmf(
     a: Matrix,
@@ -47,6 +48,7 @@ def sequential_als_nmf(
     t_u: Optional[int] = None,
     t_v: Optional[int] = None,
     track_error: bool = True,
+    backend: Optional[str] = None,
 ) -> SequentialResult:
     n = a.shape[0]
     m = a.shape[1]
@@ -83,11 +85,11 @@ def sequential_als_nmf(
         def inner(inner_carry, _):
             u2, v2_prev, mn = inner_carry
             # V2 = (A^T U2 - V1 U1^T U2) (U2^T U2)^{-1}
-            rhs_v = _matmul_t(a, u2) - v1 @ (u1.T @ u2)
+            rhs_v = _matmul_t(a, u2, backend=backend) - v1 @ (u1.T @ u2)
             v2 = solve_gram(u2.T @ u2, rhs_v)
             v2 = sp_v(jnp.maximum(v2, 0.0))
             # U2 = (A V2 - U1 V1^T V2) (V2^T V2)^{-1}
-            rhs_u = _matmul(a, v2) - u1 @ (v1.T @ v2)
+            rhs_u = _matmul(a, v2, backend=backend) - u1 @ (v1.T @ v2)
             u2_new = solve_gram(v2.T @ v2, rhs_u)
             u2_new = sp_u(jnp.maximum(u2_new, 0.0))
             r = M.relative_residual(u2_new, u2)

@@ -3,18 +3,23 @@
 The paper's core operation (Alg. 2 steps 2/4): keep only the ``t``
 largest-magnitude entries of a matrix, zeroing the rest.
 
-Three implementations:
+Four implementations:
 
 * :func:`topk_project_exact` — ``jax.lax.top_k`` based; exact, O(N log N)
   memory-heavy; the oracle for tests and fine for small matrices.
 * :func:`topk_project_bisect` — threshold bisection: find ``tau`` such that
   ``count(|x| >= tau) ~= t`` with a fixed number of float bisection steps,
-  then mask.  O(N) work per step, O(1) extra memory, and — crucially — on a
-  device mesh the only cross-device traffic is one scalar ``psum`` per step
-  (vectorized into a single fused reduction in ``core.distributed``).
+  then mask.  O(N) work per step, O(1) extra memory.  (Its mesh
+  counterpart is :class:`DistTopK` below, which replaces the per-step
+  count reductions with a single fused histogram ``psum``.)
 * :func:`topk_project_columns` — per-column enforcement (paper §4 remedy for
   uneven nonzero distribution): exact per column via ``top_k`` on the column
   axis.
+* :class:`DistTopK` — histogram threshold selection over a factor whose
+  distinct shards live along named mesh axes (shard_map context): one
+  fused ``(nbins,)``-vector ``psum`` per projection instead of
+  ``num_steps`` latency-bound scalar rounds.  On a 1x1 mesh the psum is
+  identity and this is a plain histogram top-t.
 
 Ties at the threshold: the bisection variant keeps *all* entries equal to the
 final ``tau`` (so NNZ may exceed ``t`` by the tie count); with continuous
@@ -34,6 +39,8 @@ __all__ = [
     "topk_project_exact",
     "topk_project_bisect",
     "topk_project_columns",
+    "dist_topk_threshold",
+    "DistTopK",
     "FusedReluTopK",
     "nnz",
 ]
@@ -163,6 +170,72 @@ class FusedReluTopK:
         tau = topk_threshold_bisect(x, self.t, self.num_steps,
                                     count_fn=count_pos_ge, hi_init=hi)
         return fused_project_mask(x, tau, interpret=self.interpret)
+
+
+# ---------------------------------------------------------------------------
+# Distributed top-t via histogram threshold selection (shard_map context)
+# ---------------------------------------------------------------------------
+
+def dist_topk_threshold(x: jax.Array, t: int,
+                        axes: Tuple[str, ...],
+                        nbins: int = 8192) -> jax.Array:
+    """Find tau with global ``count(|x| >= tau) ~ t``, where the global
+    factor is the concatenation of the distinct shards along the named mesh
+    ``axes`` (the factor's shard axes under shard_map).
+
+    Single round-trip: build a local histogram of |x| over log-spaced bins,
+    psum it over the shard axes, then scan the global histogram for the bin
+    whose cumulative count reaches t.  Resolution is one bin (~0.2% in
+    magnitude with 8192 log bins) — well below ALS noise; the exact variant
+    exists for tests.  (``num_steps`` sequential scalar psums would be
+    latency-bound at 512 devices; one fused (nbins,)-vector psum is not.)
+    """
+    absx = jnp.abs(x)
+    gmax = jax.lax.pmax(jnp.max(absx), axes)
+    # log-spaced bins in [gmax*1e-12, gmax]; direct log-bucketing is a
+    # single elementwise pass (searchsorted's binary search made ~13 full
+    # passes over the factor)
+    log_lo = jnp.log(gmax * 1e-12 + 1e-38)
+    log_hi = jnp.log(gmax + 1e-38)
+    step = (log_hi - log_lo) / (nbins - 1)
+    logx = jnp.log(jnp.maximum(absx.ravel(), 1e-38))
+    idx = jnp.clip(jnp.ceil((logx - log_lo) / step), 0, nbins).astype(jnp.int32)
+    hist = jnp.zeros((nbins + 1,), jnp.int32).at[idx].add(
+        (absx.ravel() > 0).astype(jnp.int32)
+    )
+    hist = jax.lax.psum(hist, axes)
+    # count of elements >= edges[b] is suffix sum of bins > b
+    suffix = jnp.cumsum(hist[::-1])[::-1]
+    counts_ge = suffix[1:]  # counts_ge[b] = # elements with |x| >= edges[b]
+    # pick the largest tau whose count >= t
+    ok = counts_ge >= t
+    bidx = jnp.max(jnp.where(ok, jnp.arange(nbins), -1))
+    tau = jnp.where(bidx < 0, jnp.float32(0.0),
+                    jnp.exp(log_lo + bidx.astype(jnp.float32) * step))
+    return tau.astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistTopK:
+    """Mesh-aware top-t sparsifier: keep the ``t`` globally-largest-magnitude
+    entries of a factor sharded along mesh ``axes``.
+
+    The threshold comes from :func:`dist_topk_threshold` (one fused
+    histogram psum over the shard axes) and every entry at or above it is
+    kept, so NNZ lands within one histogram bin of ``t``.  Frozen
+    dataclass: hashable by value, so it rides through the jit-static
+    ``sparsify_u`` / ``sparsify_v`` engine arguments exactly like the local
+    sparsifiers.  Must be called inside a shard_map over a mesh that
+    defines ``axes``.
+    """
+
+    t: int
+    axes: Tuple[str, ...]
+    nbins: int = 8192
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        tau = dist_topk_threshold(x, self.t, self.axes, self.nbins)
+        return jnp.where(jnp.abs(x) >= tau, x, 0.0)
 
 
 # ---------------------------------------------------------------------------

@@ -8,6 +8,12 @@ analysis, and dump the artifacts the roofline harness consumes.
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --nmf [--multi-pod]
+
+``--nmf`` lowers the paper's large factorization through the *unified*
+sharded ALS engine (``make_sharded_als`` + ``ShardedBackend`` — the exact
+code path ``solver="distributed"`` executes), so the pod-scale memory /
+cost numbers describe the production engine, not a stand-in.
 
 The XLA_FLAGS line above MUST run before any other import (jax locks the
 device count at first init); smoke tests and benchmarks do NOT import this
@@ -120,6 +126,8 @@ def run_cell(cfg, shape, mesh, verbose=True, save_hlo: Optional[str] = None,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older jax: [per-module dict]
+            ca = ca[0] if ca else {}
         ma = compiled.memory_analysis()
         rec.update(
             status="ok",

@@ -19,3 +19,21 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh for tests on however many devices exist."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_nmf_mesh(rows: int, cols: int) -> jax.sharding.Mesh:
+    """The ("data", "model") grid the sharded NMF engine executes on —
+    rows shard U / A's row blocks, cols shard V / A's column blocks.  This
+    is the single construction point ``NMFConfig.mesh_shape`` lowers
+    through (solvers, benchmarks, and tests all come here), so swapping in
+    a production pod topology is a one-line change."""
+    import numpy as np
+
+    devices = jax.devices()
+    if len(devices) < rows * cols:
+        raise ValueError(
+            f"mesh_shape {(rows, cols)} needs {rows * cols} devices, "
+            f"have {len(devices)}")
+    return jax.sharding.Mesh(
+        np.asarray(devices[: rows * cols]).reshape(rows, cols),
+        ("data", "model"))

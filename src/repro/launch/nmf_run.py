@@ -14,15 +14,13 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import NMF_CONFIGS
-from repro.core.distributed import dist_enforced_als, make_dist_specs
 
 
 def nmf_input_specs(n: int, m: int, k: int, cap: int, cap_t: int,
@@ -37,7 +35,6 @@ def nmf_input_specs(n: int, m: int, k: int, cap: int, cap_t: int,
         sds((r, c, m_loc, cap_t), f32),    # values_t
         sds((r, c, m_loc, cap_t), i32),    # cols_t
         sds((n, k), f32),                  # u0
-        sds((m, k), f32),                  # v0
     )
 
 
@@ -45,11 +42,19 @@ def nmf_dryrun_cell(mesh: jax.sharding.Mesh, *,
                     n: int = 4_000_000, m: int = 1_000_000, k: int = 256,
                     nnz_per_row: int = 256, iters: int = 20,
                     t_frac: float = 0.02) -> Dict:
-    """Lower + compile the paper's Alg. 2 at production scale on ``mesh``.
+    """Lower + compile the paper's Alg. 2 at production scale on ``mesh`` —
+    the *unified* ALS engine shard_mapped via ``make_sharded_als`` (the
+    exact code path ``solver="distributed"`` executes), not a separate
+    distributed loop.
 
     Capacity sizing: row nonzeros spread over C column blocks with 2x skew
     margin; transpose orientation likewise (col nnz = n*nnz/m).
     """
+    from repro.backend.sharded import make_sharded_als
+    from repro.compat import set_mesh
+    from repro.core.nmf import NMFResult
+    from repro.core.topk import DistTopK
+
     axes = mesh.axis_names
     rows_axes = tuple(a for a in ("pod", "data") if a in axes)
     r = 1
@@ -62,28 +67,35 @@ def nmf_dryrun_cell(mesh: jax.sharding.Mesh, *,
     t_u = int(n * k * t_frac)
     t_v = int(m * k * t_frac)
 
-    run = dist_enforced_als(mesh, rows_axes, "model", t_u=t_u, t_v=t_v,
-                            iters=iters, track_error=False)
-    a_spec, u_spec, v_spec = make_dist_specs(rows_axes, "model")
+    run = make_sharded_als(
+        mesh, rows_axes, "model",
+        sparsify_u=DistTopK(t_u, rows_axes),
+        sparsify_v=DistTopK(t_v, ("model",)),
+        track_error=False,
+    )
+    a_spec, u_spec, v_spec = run.specs
     specs = nmf_input_specs(n, m, k, cap, cap_t, r, c)
     shardings = tuple(
         NamedSharding(mesh, s)
-        for s in (a_spec, a_spec, a_spec, a_spec, u_spec, v_spec)
+        for s in (a_spec, a_spec, a_spec, a_spec, u_spec)
+    )
+    rep = NamedSharding(mesh, P())
+    out_shardings = NMFResult(
+        u=NamedSharding(mesh, u_spec), v=NamedSharding(mesh, v_spec),
+        residual=rep, error=rep, max_nnz=rep, nnz_u=rep, nnz_v=rep,
     )
     t0 = time.time()
-    from repro.compat import set_mesh
-
     with set_mesh(mesh):
         jitted = jax.jit(
-            run.jitted.__wrapped__,
+            run.shard_fn(iters),
             in_shardings=shardings,
-            out_shardings=(NamedSharding(mesh, u_spec),
-                           NamedSharding(mesh, v_spec),
-                           NamedSharding(mesh, P()), NamedSharding(mesh, P())),
+            out_shardings=out_shardings,
         )
         lowered = jitted.lower(*specs)
         compiled = lowered.compile()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns [per-module dict]
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     rec = {
         "arch": "nmf-large-synthetic",

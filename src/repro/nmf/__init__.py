@@ -1,7 +1,7 @@
 """Unified estimator front door for the paper's NMF solver family.
 
-One import surface over the four legacy entry points (``als_nmf``,
-``enforced_sparsity_nmf``, ``sequential_als_nmf``, ``dist_enforced_als``):
+One import surface over the legacy entry points (``als_nmf``,
+``enforced_sparsity_nmf``, ``sequential_als_nmf``):
 
     from repro.nmf import EnforcedNMF, NMFConfig, Sparsity
 
@@ -10,8 +10,10 @@ One import surface over the four legacy entry points (``als_nmf``,
     v_new = model.transform(a2)   # fold-in: topic inference, U frozen
     model.partial_fit(chunk)      # streaming mini-batches
 
-The legacy functions remain public and unchanged; the registered solvers
-are thin strategy wrappers over them.
+The single-device legacy functions remain public and unchanged; the
+registered solvers are thin strategy wrappers over the shared ALS engine.
+The ``"distributed"`` solver is that same engine shard_mapped over a
+``mesh_shape`` device grid (see :mod:`repro.backend.sharded`).
 """
 from repro.nmf.config import NMFConfig, Sparsity
 from repro.nmf.estimator import EnforcedNMF

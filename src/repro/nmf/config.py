@@ -149,14 +149,20 @@ class NMFConfig:
       ``None`` auto-selects from the input type and device: scipy-sparse
       corpora take the Pallas BSR kernel path on TPU and the jnp-csr
       reference elsewhere.  Only the ALS family (``"als"``/``"enforced"``)
-      supports ``"pallas-bsr"``.
+      supports ``"pallas-bsr"``.  For the ``"distributed"`` solver this
+      names the *local per-shard* backend that
+      :class:`repro.backend.sharded.ShardedBackend` wraps with the mesh
+      collectives (currently ``"jnp-csr"``; BSR shard ingest is an open
+      roadmap item).
     * ``tol`` — early-stop tolerance on the relative residual
       ``||U_i - U_{i-1}||_F / ||U_i||_F``; 0 disables early stopping.
     * ``seed`` — PRNG seed for the default initial guess.
     * ``block_size`` — topic-block width for the ``"sequential"`` solver
       (must divide ``k``; width 1 is the paper's Fig. 9 fast path).
     * ``mesh_shape`` — ``(rows, cols)`` device grid for the ``"distributed"``
-      solver; the default runs on a 1x1 mesh (single device).
+      solver (rows shard U / A's row blocks on the ``"data"`` mesh axis,
+      cols shard V / A's column blocks on ``"model"``); the default runs
+      on a 1x1 mesh (single device) through the identical shard_map path.
     """
 
     k: int = 5
@@ -191,6 +197,16 @@ class NMFConfig:
                 raise ValueError(
                     f"backend 'pallas-bsr' is only supported by the ALS "
                     f"family solvers (als/enforced), not {self.solver!r}")
+            if self.solver == "distributed" and self.backend != "jnp-csr":
+                raise ValueError(
+                    f"the distributed solver shards per-device CSR blocks; "
+                    f"supported local backends: ['jnp-csr'], got "
+                    f"{self.backend!r}")
+        if (len(self.mesh_shape) != 2
+                or any(int(s) <= 0 for s in self.mesh_shape)):
+            raise ValueError(
+                f"mesh_shape must be a (rows, cols) pair of positive ints, "
+                f"got {self.mesh_shape!r}")
         jnp.dtype(self.dtype)  # fail fast on bad dtype names
 
     @property

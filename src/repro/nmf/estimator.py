@@ -50,6 +50,13 @@ class EnforcedNMF:
     ``EnforcedNMF(k=10, solver="sequential")`` works without building an
     ``NMFConfig`` by hand.
 
+    ``solver="distributed"`` executes the same ALS engine shard_mapped
+    over a ``config.mesh_shape`` device grid (``("data", "model")`` axes):
+    the fitted ``u_`` comes back sharded over ``"data"``, ``v_`` over
+    ``"model"``, and the history traces are replicated scalars — every
+    other estimator feature (``tol``, ``track_error``, nnz trajectories)
+    is unchanged because the engine is.
+
     Fitted attributes: ``u_`` (n, k), ``v_`` (m, k), ``result_``
     (:class:`FitResult` history), ``n_iter_``, ``n_features_`` (term count),
     ``n_docs_seen_``.

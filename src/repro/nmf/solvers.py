@@ -1,18 +1,18 @@
-"""Registered solver strategies wrapping the legacy engines.
+"""Registered solver strategies over the shared ALS engine.
 
 Every solver maps ``(a, config, u0) -> FitResult`` and accepts both dense
-``jax.Array`` and padded-CSR ``SpCSR`` inputs (the legacy engines dispatch on
-the type internally).  The legacy front doors — ``als_nmf``,
-``enforced_sparsity_nmf``, ``sequential_als_nmf``, ``dist_enforced_als`` —
-stay public and unchanged; these wrappers only translate the unified
-``NMFConfig`` onto them.
+``jax.Array`` and padded-CSR ``SpCSR`` inputs (the engines dispatch on the
+type internally).  The ALS family — ``als``, ``enforced``, and
+``distributed`` — is *one* engine (:func:`repro.core.nmf.als_nmf`) under
+three execution configurations: the distributed solver only swaps in a
+:class:`repro.backend.sharded.ShardedBackend` and mesh-aware sparsifiers,
+so ``tol`` early-stop chunking, per-iteration ``nnz_u``/``nnz_v``
+trajectories, ``track_error``, and ``FitResult.converged`` behave
+identically on one device or a pod.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.nmf import Matrix, als_nmf
@@ -44,23 +44,12 @@ def _reject_bsr_operand(a: Matrix, solver_name: str) -> None:
             "pass the matrix as dense / SpCSR / scipy sparse")
 
 
-def _als_family(a: Matrix, config: NMFConfig, u0: jax.Array,
-                solver_name: str) -> FitResult:
-    from repro.backend import resolve_backend
-
-    n, m = a.shape
-    # fuse the relu+threshold epilogue into one Pallas pass when the
-    # backend asks for it (the jnp backends keep the legacy two-pass
-    # epilogue so legacy results stay bit-for-bit)
-    fused = resolve_backend(a, config.backend).fuse_epilogue
-    sp_u = config.sparsity.sparsifier(n, config.k, "u", fused=fused)
-    sp_v = config.sparsity.sparsifier(m, config.k, "v", fused=fused)
-
-    def run(u_init, iters):
-        return als_nmf(a, u_init, iters=iters, sparsify_u=sp_u,
-                       sparsify_v=sp_v, track_error=config.track_error,
-                       backend=config.backend)
-
+def _run_chunked(run, config: NMFConfig, u0: jax.Array,
+                 solver_name: str) -> FitResult:
+    """Drive ``run(u_init, iters) -> NMFResult`` with the shared early-stop
+    protocol.  Every ALS-family execution mode (local backends and the
+    sharded mesh engine) goes through here, so ``tol`` semantics are
+    defined once."""
     if config.tol <= 0.0:
         return FitResult.from_nmf_result(run(u0, config.iters), solver_name)
 
@@ -78,6 +67,26 @@ def _als_family(a: Matrix, config: NMFConfig, u0: jax.Array,
             converged = True
             break
     return FitResult.concatenate(parts, converged=converged)
+
+
+def _als_family(a: Matrix, config: NMFConfig, u0: jax.Array,
+                solver_name: str) -> FitResult:
+    from repro.backend import resolve_backend
+
+    n, m = a.shape
+    # fuse the relu+threshold epilogue into one Pallas pass when the
+    # backend asks for it (the jnp backends keep the legacy two-pass
+    # epilogue so legacy results stay bit-for-bit)
+    fused = resolve_backend(a, config.backend).fuse_epilogue
+    sp_u = config.sparsity.sparsifier(n, config.k, "u", fused=fused)
+    sp_v = config.sparsity.sparsifier(m, config.k, "v", fused=fused)
+
+    def run(u_init, iters):
+        return als_nmf(a, u_init, iters=iters, sparsify_u=sp_u,
+                       sparsify_v=sp_v, track_error=config.track_error,
+                       backend=config.backend)
+
+    return _run_chunked(run, config, u0, solver_name)
 
 
 @register_solver("als")
@@ -103,6 +112,7 @@ def solve_sequential(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
     ``t_u`` / ``t_v`` budgets apply per block (the Alg. 3 semantics); the
     legacy engine enforces them via bisection regardless of ``sparsity.mode``.
     Early-stop ``tol`` is ignored — blocks run their fixed budget.
+    ``config.backend`` is threaded through to the block products.
     """
     _reject_bsr_operand(a, "sequential")
     k2 = config.block_size
@@ -119,24 +129,42 @@ def solve_sequential(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
         t_u=config.sparsity.resolve(n, k2, "u"),
         t_v=config.sparsity.resolve(m, k2, "v"),
         track_error=config.track_error,
+        backend=config.backend,
     )
     return FitResult.from_sequential_result(res)
 
 
 @register_solver("distributed")
 def solve_distributed(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
-    """Distributed enforced ALS (DESIGN.md §4) on a ``config.mesh_shape``
-    device grid.  The default 1x1 mesh runs anywhere (CPU included) through
-    the same shard_map code path the pod dry-run lowers; larger meshes need
-    ``rows * cols`` visible devices and shapes divisible by the grid.
+    """Enforced ALS on a ``config.mesh_shape`` device grid — the *same*
+    engine as ``als``/``enforced``, shard_mapped with a
+    :class:`~repro.backend.sharded.ShardedBackend` and mesh-aware
+    :class:`~repro.core.topk.DistTopK` sparsifiers.  It therefore honors
+    ``tol`` early stopping, ``track_error``, and the per-iteration
+    ``nnz_u``/``nnz_v`` trajectories (running-max ``max_nnz``, Fig. 6
+    semantics) exactly like the single-device solvers.
 
+    The default 1x1 mesh runs anywhere (CPU included) through the same
+    shard_map code path the pod dry-run lowers; larger meshes need
+    ``rows * cols`` visible devices and shapes divisible by the grid.
     ``SpCSR`` input is sharded directly from the padded-CSR arrays —
     nnz-proportional host work, no dense (n, m) driver allocation; dense
-    input goes through the dense test/driver ingest path.
+    input goes through the thin dense->COO adapter.
+
+    ``config.backend`` names the *local* per-shard backend wrapped by
+    ``ShardedBackend`` (``None`` selects ``jnp-csr``; sparsity enforcement
+    always uses the histogram threshold — one fused vector psum — so
+    ``sparsity.mode`` bisection/exact variants map onto it here).
     """
+    from jax.sharding import NamedSharding
+
+    from repro.backend.sharded import make_sharded_als
+    from repro.compat import set_mesh
     from repro.core.distributed import (
-        dist_enforced_als, distribute_csr, distribute_csr_from_padded,
+        distribute_csr, distribute_csr_from_padded,
     )
+    from repro.core.topk import DistTopK
+    from repro.launch.mesh import make_nmf_mesh
 
     _reject_bsr_operand(a, "distributed")
     r, c = config.mesh_shape
@@ -144,28 +172,31 @@ def solve_distributed(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
     if n % r or m % c:
         raise ValueError(
             f"matrix shape {(n, m)} must be divisible by mesh_shape {(r, c)}")
-    devices = jax.devices()
-    if len(devices) < r * c:
-        raise ValueError(
-            f"mesh_shape {(r, c)} needs {r * c} devices, "
-            f"have {len(devices)}")
-    mesh = jax.sharding.Mesh(
-        np.asarray(devices[: r * c]).reshape(r, c), ("data", "model"))
+    mesh = make_nmf_mesh(r, c)
 
     if isinstance(a, SpCSR):
         dist = distribute_csr_from_padded(a, r, c)
     else:
         dist = distribute_csr(np.asarray(a), r, c)
-    run = dist_enforced_als(
-        mesh, ("data",), "model",
-        t_u=config.sparsity.resolve(n, config.k, "u"),
-        t_v=config.sparsity.resolve(m, config.k, "v"),
-        iters=config.iters, track_error=config.track_error,
+
+    rows_axes, cols_axis = ("data",), "model"
+    t_u = config.sparsity.resolve(n, config.k, "u")
+    t_v = config.sparsity.resolve(m, config.k, "v")
+    engine = make_sharded_als(
+        mesh, rows_axes, cols_axis,
+        sparsify_u=None if t_u is None else DistTopK(t_u, rows_axes),
+        sparsify_v=None if t_v is None else DistTopK(t_v, (cols_axis,)),
+        track_error=config.track_error,
+        inner=config.backend or "jnp-csr",
     )
-    v0 = jnp.zeros((m, config.k), dtype=u0.dtype)
-    u, v, rs, es = run(dist, u0, v0)
-    nnz = jnp.sum(u != 0) + jnp.sum(v != 0)
-    return FitResult(
-        u=u, v=v, residual=rs, error=es, max_nnz=nnz,
-        solver="distributed", n_iter=int(rs.shape[0]),
-    )
+    a_spec, u_spec, _ = engine.specs
+    a_sh = NamedSharding(mesh, a_spec)
+    dist = jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, a_sh) if hasattr(x, "ndim") else x, dist)
+    u0 = jax.device_put(u0, NamedSharding(mesh, u_spec))
+
+    def run(u_init, iters):
+        with set_mesh(mesh):
+            return engine(dist, u_init, iters)
+
+    return _run_chunked(run, config, u0, "distributed")

@@ -317,6 +317,23 @@ def test_distribute_csr_from_padded_matches_dense_ingest(corpus):
         _shards_to_dense(d2.values_t, d2.cols_t, 100, 150))
 
 
+def test_sequential_solver_threads_backend(corpus):
+    """Regression: the sequential engine used to drop ``config.backend`` on
+    the floor, resolving products from the operand type only.  An explicit
+    ``backend="jnp-csr"`` (dense input ingested to SpCSR) must agree with
+    the dense run."""
+    a_dense = jnp.asarray(to_dense(corpus))
+    cfg = dict(k=4, iters=6, solver="sequential", block_size=2,
+               sparsity=Sparsity(t_u=40, t_v=120))
+    ref = EnforcedNMF(NMFConfig(**cfg)).fit(a_dense)
+    csr = EnforcedNMF(NMFConfig(backend="jnp-csr", **cfg)).fit(a_dense)
+    assert csr.result_.solver == ref.result_.solver == "sequential"
+    np.testing.assert_allclose(csr.result_.final_error,
+                               ref.result_.final_error, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(csr.result_.residual),
+                               np.asarray(ref.result_.residual), atol=1e-3)
+
+
 def test_solve_distributed_spcsr_never_densifies(corpus, monkeypatch):
     import repro.core.distributed as dist_mod
     import repro.sparse.csr as csr_mod

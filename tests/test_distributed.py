@@ -1,6 +1,10 @@
 """Distributed NMF + compression tests.  Multi-device cases run in a
 subprocess with --xla_force_host_platform_device_count (the main process
-keeps 1 device so other tests see the default config)."""
+keeps 1 device so other tests see the default config).
+
+The distributed path is the *unified* ALS engine shard_mapped via
+``make_sharded_als`` — there is no separate distributed solver loop; the
+deeper parity suite lives in tests/test_sharded_engine.py."""
 import json
 import os
 import subprocess
@@ -26,12 +30,14 @@ def run_with_devices(n, code):
 
 
 def test_dist_als_matches_single_device():
-    """Distributed enforced ALS on a 4x2 mesh ~= single-device oracle."""
+    """Sharded unified engine on a 4x2 mesh ~= single-device oracle."""
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np, json
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.compat import set_mesh
-        from repro.core.distributed import distribute_csr, dist_enforced_als, DistCSR
+        from repro.backend.sharded import make_sharded_als
+        from repro.core.distributed import distribute_csr
+        from repro.core.topk import DistTopK
         from repro.core import init_u0, enforced_sparsity_nmf
         from repro.data import synthetic_journal_corpus
         from repro.sparse import to_dense
@@ -40,26 +46,30 @@ def test_dist_als_matches_single_device():
         a = np.asarray(to_dense(a_sp))
         dist = distribute_csr(a, 4, 2)
         u0 = np.asarray(init_u0(jax.random.PRNGKey(2), 256, 5))
-        v0 = np.zeros((128, 5), np.float32)
         with set_mesh(mesh):
-            run = dist_enforced_als(mesh, ("data",), "model", t_u=55, t_v=300, iters=20)
-            sh = NamedSharding(mesh, P(("data",), "model", None, None))
-            args = [jax.device_put(x, sh) for x in
-                    (dist.values, dist.cols, dist.values_t, dist.cols_t)]
-            d = DistCSR(*args, shape=(256, 128))
+            run = make_sharded_als(mesh, ("data",), "model",
+                                   sparsify_u=DistTopK(55, ("data",)),
+                                   sparsify_v=DistTopK(300, ("model",)))
+            a_sh = NamedSharding(mesh, P(("data",), "model", None, None))
+            dist = jax.tree_util.tree_map(lambda x: jax.device_put(x, a_sh), dist)
             u0d = jax.device_put(u0, NamedSharding(mesh, P(("data",), None)))
-            v0d = jax.device_put(v0, NamedSharding(mesh, P("model", None)))
-            u, v, rs, es = run(d, u0d, v0d)
+            res = run(dist, u0d, 20)
         ref = enforced_sparsity_nmf(jnp.asarray(a), jnp.asarray(u0),
                                     t_u=55, t_v=300, iters=20, exact=True)
         print(json.dumps({
-            "dist_err": float(es[-1]), "ref_err": float(ref.error[-1]),
-            "nnz_u": int(jnp.sum(u != 0)),
+            "dist_err": float(res.error[-1]), "ref_err": float(ref.error[-1]),
+            "nnz_u": int(jnp.sum(res.u != 0)),
+            "nnz_u_trace": int(res.nnz_u[-1]),
+            "max_nnz": int(res.max_nnz), "ref_max_nnz": int(ref.max_nnz),
         }))
     """)
     out = json.loads(run_with_devices(8, code).strip().splitlines()[-1])
     assert abs(out["dist_err"] - out["ref_err"]) < 0.02
     assert out["nnz_u"] <= 60
+    # the per-iteration nnz trace is the same global count
+    assert out["nnz_u_trace"] == out["nnz_u"]
+    # running max over iterations (Fig. 6), not the final count
+    assert out["max_nnz"] == out["ref_max_nnz"]
 
 
 def test_dist_als_multipod_axes():
@@ -69,7 +79,9 @@ def test_dist_als_multipod_axes():
         import jax, jax.numpy as jnp, numpy as np, json
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.compat import set_mesh
-        from repro.core.distributed import distribute_csr, dist_enforced_als, DistCSR
+        from repro.backend.sharded import make_sharded_als
+        from repro.core.distributed import distribute_csr
+        from repro.core.topk import DistTopK
         from repro.core import init_u0
         from repro.data import synthetic_journal_corpus
         from repro.sparse import to_dense
@@ -78,18 +90,16 @@ def test_dist_als_multipod_axes():
         a = np.asarray(to_dense(a_sp))
         dist = distribute_csr(a, 4, 2)
         u0 = np.asarray(init_u0(jax.random.PRNGKey(2), 128, 4))
-        v0 = np.zeros((64, 4), np.float32)
         with set_mesh(mesh):
-            run = dist_enforced_als(mesh, ("pod", "data"), "model",
-                                    t_u=40, t_v=100, iters=10)
-            sh = NamedSharding(mesh, P(("pod", "data"), "model", None, None))
-            args = [jax.device_put(x, sh) for x in
-                    (dist.values, dist.cols, dist.values_t, dist.cols_t)]
-            d = DistCSR(*args, shape=(128, 64))
+            run = make_sharded_als(mesh, ("pod", "data"), "model",
+                                   sparsify_u=DistTopK(40, ("pod", "data")),
+                                   sparsify_v=DistTopK(100, ("model",)))
+            a_sh = NamedSharding(mesh, P(("pod", "data"), "model", None, None))
+            dist = jax.tree_util.tree_map(lambda x: jax.device_put(x, a_sh), dist)
             u0d = jax.device_put(u0, NamedSharding(mesh, P(("pod", "data"), None)))
-            v0d = jax.device_put(v0, NamedSharding(mesh, P("model", None)))
-            u, v, rs, es = run(d, u0d, v0d)
-        print(json.dumps({"err": float(es[-1]), "finite": bool(jnp.isfinite(es[-1]))}))
+            res = run(dist, u0d, 10)
+        print(json.dumps({"err": float(res.error[-1]),
+                          "finite": bool(jnp.isfinite(res.error[-1]))}))
     """)
     out = json.loads(run_with_devices(8, code).strip().splitlines()[-1])
     assert out["finite"] and out["err"] < 1.0
@@ -129,10 +139,12 @@ def test_compressed_grads_error_feedback():
 
 
 def test_single_device_shard_map_paths():
-    """dist ALS code path also runs on a 1x1 mesh in-process."""
+    """The sharded engine code path also runs on a 1x1 mesh in-process."""
+    from repro.backend.sharded import make_sharded_als
     from repro.compat import set_mesh
-    from repro.core.distributed import distribute_csr, dist_enforced_als, DistCSR
     from repro.core import init_u0
+    from repro.core.distributed import distribute_csr
+    from repro.core.topk import DistTopK
     from repro.data import synthetic_journal_corpus
     from repro.sparse import to_dense
     mesh = jax.make_mesh((1, 1), ("data", "model"))
@@ -140,8 +152,10 @@ def test_single_device_shard_map_paths():
     a = np.asarray(to_dense(a_sp))
     dist = distribute_csr(a, 1, 1)
     u0 = init_u0(jax.random.PRNGKey(0), 64, 4)
-    v0 = jnp.zeros((32, 4), jnp.float32)
     with set_mesh(mesh):
-        run = dist_enforced_als(mesh, ("data",), "model", t_u=30, iters=8)
-        u, v, rs, es = run(dist, u0, v0)
-    assert jnp.isfinite(es[-1])
+        run = make_sharded_als(mesh, ("data",), "model",
+                               sparsify_u=DistTopK(30, ("data",)))
+        res = run(dist, u0, 8)
+    assert jnp.isfinite(res.error[-1])
+    assert res.residual.shape == (8,)
+    assert int(res.nnz_u[-1]) <= 30 + 4  # histogram-bin tie tolerance
