@@ -130,6 +130,12 @@ def main():
     hits = sum(1 for req in done if req.topics)
     print(f"   {hits}/{len(done)} documents assigned a topic")
 
+    print("== stage 5: continuous refresh (served docs -> partial_fit) ==")
+    t0 = time.time()
+    folded = server.refresh()
+    print(f"   folded {folded} served docs back into the model in "
+          f"{time.time()-t0:.2f}s (total docs seen: {model.n_docs_seen_})")
+
 
 if __name__ == "__main__":
     main()

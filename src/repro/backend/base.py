@@ -15,7 +15,11 @@ residual / error / nnz bookkeeping runs through the reduction hooks
 (:class:`LocalExecution`) the reductions are identity, so the engine is
 bit-for-bit the legacy single-device loop; under
 :class:`repro.backend.sharded.ShardedBackend` they become mesh ``psum``s
-and the *same* engine runs SPMD over a device grid.
+and the *same* engine runs SPMD over a device grid.  The online engine
+(:mod:`repro.core.online`) reduces its sufficient statistics — ``sum
+A_c V_c`` via ``matmul``'s contraction, ``sum V_c^T V_c`` via ``reduce_v``
+— through the identical hooks, so streaming inherits every execution mode
+for free.
 
 Backends are stateless singletons (hashable, compared by identity) so they
 can ride through ``jax.jit`` static arguments; the matrix operand itself is

@@ -27,6 +27,15 @@ nnz(A)/(R*C) * 2 slots + (n/R + m/C) * k.
 :func:`make_sharded_als` is the lowering shim: it shard_maps the *unified*
 :func:`repro.core.nmf.als_nmf` over a mesh, handing it a :class:`ShardView`
 of the local shards and a :class:`ShardedBackend` carrying the axis names.
+:func:`make_sharded_online` does the same for the streaming engine
+(:func:`repro.core.online.online_als_step`): chunk columns sharded on the
+cols axis, the ``av`` accumulator row-sharded like U, ``gv`` replicated.
+
+Both lowering shims draw their shard_mapped and jitted callables from
+*module-level* caches keyed on ``(mesh, axes, sparsifiers, ..., iters)`` —
+so repeated ``make_sharded_*`` calls with the same configuration (one per
+``EnforcedNMF.fit`` / ``partial_fit``) reuse the compiled executable
+instead of recompiling per engine instance.
 """
 from __future__ import annotations
 
@@ -43,7 +52,8 @@ from repro.compat import SHARD_MAP_NO_CHECK, shard_map as _shard_map
 from repro.core.distributed import DistCSR, make_dist_specs
 from repro.sparse.csr import SpCSR
 
-__all__ = ["ShardView", "ShardedBackend", "make_sharded_als"]
+__all__ = ["ShardView", "ShardedBackend", "make_sharded_als",
+           "make_sharded_online"]
 
 
 @jax.tree_util.register_dataclass
@@ -155,6 +165,61 @@ class ShardedBackend:
 _SHARDABLE_INNER = ("jnp-csr",)
 
 
+def _check_inner(inner: str) -> None:
+    if inner not in _SHARDABLE_INNER:
+        raise ValueError(
+            f"ShardedBackend currently wraps {_SHARDABLE_INNER}, got "
+            f"{inner!r} (BSR shard ingest is an open roadmap item)")
+
+
+def _local_shard_view(values, cols, values_t, cols_t) -> ShardView:
+    """The (1, 1, rows, cap)-leading local block arrays inside a shard_map,
+    as a ShardView over both orientations."""
+    n_loc, m_loc = values.shape[2], values_t.shape[2]
+    return ShardView(
+        fwd=SpCSR(values[0, 0], cols[0, 0], (n_loc, m_loc)),
+        tsp=SpCSR(values_t[0, 0], cols_t[0, 0], (m_loc, n_loc)),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_als_shard_fn(mesh, rows_axes, cols_axis, sparsify_u, sparsify_v,
+                          track_error, inner, iters):
+    """Module-level cache of the shard_mapped batch-ALS step, keyed on the
+    full configuration — repeated ``solve_distributed`` fits with the same
+    config get the same callable (and thus jax's compiled-executable
+    reuse) instead of recompiling per ``make_sharded_als`` instance."""
+    from repro.core.nmf import NMFResult, als_nmf
+
+    be = ShardedBackend(get_backend(inner), rows_axes, cols_axis)
+    a_spec, u_spec, v_spec = make_dist_specs(rows_axes, cols_axis)
+    rep = P()
+    out_specs = NMFResult(u=u_spec, v=v_spec, residual=rep, error=rep,
+                          max_nnz=rep, nnz_u=rep, nnz_v=rep)
+
+    def step_fn(values, cols, values_t, cols_t, u0):
+        local = _local_shard_view(values, cols, values_t, cols_t)
+        return als_nmf(local, u0, iters=iters, sparsify_u=sparsify_u,
+                       sparsify_v=sparsify_v, track_error=track_error,
+                       backend=be)
+
+    return _shard_map(
+        step_fn,
+        mesh=mesh,
+        in_specs=(a_spec, a_spec, a_spec, a_spec, u_spec),
+        out_specs=out_specs,
+        **SHARD_MAP_NO_CHECK,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_als_jit(mesh, rows_axes, cols_axis, sparsify_u, sparsify_v,
+                     track_error, inner, iters):
+    return jax.jit(_sharded_als_shard_fn(
+        mesh, rows_axes, cols_axis, sparsify_u, sparsify_v, track_error,
+        inner, iters))
+
+
 def make_sharded_als(
     mesh: jax.sharding.Mesh,
     rows_axes: Tuple[str, ...],
@@ -173,43 +238,22 @@ def make_sharded_als(
     should be mesh-aware (:class:`repro.core.topk.DistTopK`) or ``None``.
     ``run.shard_fn(iters)`` exposes the un-jitted shard-mapped callable for
     AOT lowering (the pod dry-run).
+
+    The underlying shard_mapped / jitted callables come from module-level
+    caches keyed on ``(mesh, axes, sparsifiers, track_error, inner,
+    iters)``, so constructing a fresh engine per fit (as the solver layer
+    does) costs no recompilation.
     """
-    if inner not in _SHARDABLE_INNER:
-        raise ValueError(
-            f"ShardedBackend currently wraps {_SHARDABLE_INNER}, got "
-            f"{inner!r} (BSR shard ingest is an open roadmap item)")
+    _check_inner(inner)
+    key = (mesh, tuple(rows_axes), cols_axis, sparsify_u, sparsify_v,
+           track_error, inner)
     be = ShardedBackend(get_backend(inner), tuple(rows_axes), cols_axis)
-    a_spec, u_spec, v_spec = make_dist_specs(be.rows_axes, cols_axis)
 
-    from repro.core.nmf import NMFResult, als_nmf
-
-    rep = P()
-    out_specs = NMFResult(u=u_spec, v=v_spec, residual=rep, error=rep,
-                          max_nnz=rep, nnz_u=rep, nnz_v=rep)
-
-    @functools.lru_cache(maxsize=None)
     def shard_fn(iters: int):
-        def step_fn(values, cols, values_t, cols_t, u0):
-            n_loc, m_loc = values.shape[2], values_t.shape[2]
-            local = ShardView(
-                fwd=SpCSR(values[0, 0], cols[0, 0], (n_loc, m_loc)),
-                tsp=SpCSR(values_t[0, 0], cols_t[0, 0], (m_loc, n_loc)),
-            )
-            return als_nmf(local, u0, iters=iters, sparsify_u=sparsify_u,
-                           sparsify_v=sparsify_v, track_error=track_error,
-                           backend=be)
+        return _sharded_als_shard_fn(*key, iters)
 
-        return _shard_map(
-            step_fn,
-            mesh=mesh,
-            in_specs=(a_spec, a_spec, a_spec, a_spec, u_spec),
-            out_specs=out_specs,
-            **SHARD_MAP_NO_CHECK,
-        )
-
-    @functools.lru_cache(maxsize=None)
     def jitted(iters: int):
-        return jax.jit(shard_fn(iters))
+        return _sharded_als_jit(*key, iters)
 
     def run(a: DistCSR, u0: jax.Array, iters: int):
         return jitted(iters)(a.values, a.cols, a.values_t, a.cols_t, u0)
@@ -217,5 +261,96 @@ def make_sharded_als(
     run.shard_fn = shard_fn
     run.jitted = jitted
     run.backend = be
-    run.specs = (a_spec, u_spec, v_spec)
+    run.specs = make_dist_specs(be.rows_axes, cols_axis)
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Streaming: the online engine shard_mapped over the same grid
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _sharded_online_shard_fn(mesh, rows_axes, cols_axis, sparsify_u,
+                             sparsify_v, inner, iters):
+    from repro.core.online import (
+        OnlineStats, OnlineStepResult, online_als_step,
+    )
+
+    be = ShardedBackend(get_backend(inner), rows_axes, cols_axis)
+    a_spec, u_spec, v_spec = make_dist_specs(rows_axes, cols_axis)
+    rep = P()
+    out_specs = OnlineStepResult(
+        u=u_spec, v=v_spec, stats=OnlineStats(av=u_spec, gv=rep))
+
+    def step_fn(values, cols, values_t, cols_t, u, av, gv, forget):
+        local = _local_shard_view(values, cols, values_t, cols_t)
+        return online_als_step(
+            local, u, OnlineStats(av=av, gv=gv), forget, iters=iters,
+            sparsify_u=sparsify_u, sparsify_v=sparsify_v, backend=be)
+
+    return _shard_map(
+        step_fn,
+        mesh=mesh,
+        in_specs=(a_spec, a_spec, a_spec, a_spec, u_spec, u_spec, rep, rep),
+        out_specs=out_specs,
+        **SHARD_MAP_NO_CHECK,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_online_jit(mesh, rows_axes, cols_axis, sparsify_u, sparsify_v,
+                        inner, iters):
+    return jax.jit(_sharded_online_shard_fn(
+        mesh, rows_axes, cols_axis, sparsify_u, sparsify_v, inner, iters))
+
+
+def make_sharded_online(
+    mesh: jax.sharding.Mesh,
+    rows_axes: Tuple[str, ...],
+    cols_axis: str,
+    *,
+    sparsify_u=None,
+    sparsify_v=None,
+    inner: str = "jnp-csr",
+):
+    """shard_map the online engine (:func:`repro.core.online.online_als_step`)
+    over ``mesh``.
+
+    Returns ``run(a_chunk: DistCSR, u, stats, iters, forget=1.0) ->
+    OnlineStepResult`` where the chunk's columns are sharded over
+    ``cols_axis`` (its rows over ``rows_axes``, like the batch layout), ``u``
+    and ``stats.av`` are row-sharded ``P(rows_axes, None)``, and ``stats.gv``
+    is replicated.  The chunk's sufficient statistics ``A_c V_c`` /
+    ``V_c^T V_c`` are mesh-reduced through the ``ShardedBackend`` hooks
+    (``matmul`` psums over ``cols_axis``, ``reduce_v`` over ``cols_axis``),
+    so the committed accumulators are the global quantities — online NMF on
+    a pod with per-device memory ~ nnz(chunk)/(R*C) + (n/R + m_c/C) * k.
+
+    ``sparsify_u`` / ``sparsify_v`` should be mesh-aware
+    (:class:`repro.core.topk.DistTopK` — ``sparsify_v`` over
+    ``(cols_axis,)`` for the per-chunk V top-t) or ``None``.  Callables are
+    drawn from the same module-level keyed caches as
+    :func:`make_sharded_als`, so one engine per ``partial_fit`` call costs
+    no recompilation.
+    """
+    _check_inner(inner)
+    key = (mesh, tuple(rows_axes), cols_axis, sparsify_u, sparsify_v, inner)
+    be = ShardedBackend(get_backend(inner), tuple(rows_axes), cols_axis)
+
+    def shard_fn(iters: int):
+        return _sharded_online_shard_fn(*key, iters)
+
+    def jitted(iters: int):
+        return _sharded_online_jit(*key, iters)
+
+    def run(a_chunk: DistCSR, u: jax.Array, stats, iters: int,
+            forget=1.0):
+        forget = jnp.asarray(forget, dtype=u.dtype)
+        return jitted(iters)(a_chunk.values, a_chunk.cols, a_chunk.values_t,
+                             a_chunk.cols_t, u, stats.av, stats.gv, forget)
+
+    run.shard_fn = shard_fn
+    run.jitted = jitted
+    run.backend = be
+    run.specs = make_dist_specs(be.rows_axes, cols_axis)
     return run

@@ -6,11 +6,20 @@ from repro.core.enforced import (
     global_topt_exact,
     columnwise_topt,
 )
+from repro.core.online import (
+    OnlineStats,
+    OnlineStepResult,
+    init_online_stats,
+    online_als_step,
+    seed_online_stats,
+)
 from repro.core.sequential import SequentialResult, sequential_als_nmf
 from repro.core import metrics, topk
 
 __all__ = [
     "NMFResult", "als_nmf", "init_u0", "solve_gram",
     "enforced_sparsity_nmf", "global_topt", "global_topt_exact", "columnwise_topt",
+    "OnlineStats", "OnlineStepResult", "init_online_stats", "online_als_step",
+    "seed_online_stats",
     "SequentialResult", "sequential_als_nmf", "metrics", "topk",
 ]

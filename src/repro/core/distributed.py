@@ -27,7 +27,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["DistCSR", "distribute_csr", "distribute_csr_from_padded",
-           "make_dist_specs"]
+           "distribute_operand", "make_dist_specs"]
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +128,24 @@ def distribute_csr_from_padded(a, r: int, c: int) -> DistCSR:
     mask = values != 0
     rows_e = np.broadcast_to(np.arange(n)[:, None], values.shape)[mask]
     return _distribute_coo(rows_e, cols[mask], values[mask], n, m, r, c)
+
+
+def distribute_operand(a, r: int, c: int, mesh, a_spec) -> DistCSR:
+    """Dense-or-SpCSR operand -> (R, C) shard grid, device_put with the
+    mesh sharding — the shared ingest step of every mesh engine entry
+    point (batch ``solve_distributed`` and streaming
+    ``_partial_fit_sharded``)."""
+    from jax.sharding import NamedSharding
+
+    from repro.sparse.csr import SpCSR
+
+    if isinstance(a, SpCSR):
+        dist = distribute_csr_from_padded(a, r, c)
+    else:
+        dist = distribute_csr(np.asarray(a), r, c)
+    a_sh = NamedSharding(mesh, a_spec)
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, a_sh) if hasattr(x, "ndim") else x, dist)
 
 
 def make_dist_specs(rows_axes: Tuple[str, ...], cols_axis: str):

@@ -16,7 +16,10 @@ Gram reductions go through the backend's ``reduce_u`` / ``reduce_v`` /
 ``reduce_all`` hooks, which are identity for the local backends and mesh
 ``psum``s for :class:`repro.backend.sharded.ShardedBackend` — so the same
 scan loop runs single-device or SPMD inside a shard_map, with sharding as
-an execution property rather than a second algorithm.
+an execution property rather than a second algorithm.  The streaming
+sibling (:mod:`repro.core.online`) shares ``solve_gram`` / ``_epilogue`` /
+``_resolve`` and the same backend discipline for its sufficient-statistics
+update.
 """
 from __future__ import annotations
 

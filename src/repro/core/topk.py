@@ -225,8 +225,10 @@ class DistTopK:
     kept, so NNZ lands within one histogram bin of ``t``.  Frozen
     dataclass: hashable by value, so it rides through the jit-static
     ``sparsify_u`` / ``sparsify_v`` engine arguments exactly like the local
-    sparsifiers.  Must be called inside a shard_map over a mesh that
-    defines ``axes``.
+    sparsifiers — both for the batch engine and for the per-chunk V top-t
+    of the streaming engine, where ``t`` is the chunk-rescaled budget (and
+    can legitimately be tiny for narrow chunks).  Must be called inside a
+    shard_map over a mesh that defines ``axes``.
     """
 
     t: int
@@ -234,6 +236,8 @@ class DistTopK:
     nbins: int = 8192
 
     def __call__(self, x: jax.Array) -> jax.Array:
+        if int(self.t) <= 0:
+            return jnp.zeros_like(x)
         tau = dist_topk_threshold(x, self.t, self.axes, self.nbins)
         return jnp.where(jnp.abs(x) >= tau, x, 0.0)
 

@@ -9,6 +9,11 @@ Real run (any size that fits one host), through the unified estimator:
     PYTHONPATH=src python -m repro.launch.nmf_run --config pubmed --t-u 5000
     PYTHONPATH=src python -m repro.launch.nmf_run --config reuters \
         --solver sequential --sparsity "t_u=55,t_v=2000,mode=global"
+
+Streaming (the online sufficient-statistics engine; add --mesh 2x2 on a
+multi-device host for the mesh-reduced variant):
+    PYTHONPATH=src python -m repro.launch.nmf_run --config reuters --small \
+        --solver streaming --stream --chunk-docs 256
 """
 from __future__ import annotations
 
@@ -134,14 +139,36 @@ def main(argv=None):
     ap.add_argument("--backend", default=None,
                     help="matmul backend for the ALS hot path "
                          "(jnp-dense / jnp-csr / pallas-bsr; default: auto)")
+    ap.add_argument("--stream", action="store_true",
+                    help="stream the corpus through the online engine in "
+                         "document chunks (implies --solver streaming)")
+    ap.add_argument("--chunk-docs", type=int, default=None,
+                    help="documents per streaming chunk (default: 8 chunks)")
+    ap.add_argument("--mesh", default=None, metavar="RxC",
+                    help="device grid for the distributed/streaming solvers, "
+                         "e.g. 2x2 (default 1x1)")
     ap.add_argument("--small", action="store_true", help="1/8 scale")
     args = ap.parse_args(argv)
+
+    solver = "streaming" if args.stream else args.solver
+    mesh_shape = (1, 1)
+    if args.mesh:
+        r, _, c = args.mesh.lower().partition("x")
+        mesh_shape = (int(r), int(c))
 
     cfg = dict(NMF_CONFIGS[args.config])
     n, m, k = cfg["n_terms"], cfg["n_docs"], cfg["k"]
     iters = args.iters or cfg.get("iters", 50)
     if args.small:
         n, m = n // 8, m // 8
+    chunk_docs = args.chunk_docs
+    if mesh_shape != (1, 1):
+        # the mesh engines shard whole row/column blocks: trim the
+        # synthetic corpus to divisible sizes (streaming chunks need no
+        # alignment — ragged widths pad with empty documents internally)
+        r, c = mesh_shape
+        n = max(n - n % r, r)
+        m = max(m - m % c, c)
     from repro.data import synthetic_journal_corpus
     from repro.nmf import EnforcedNMF, NMFConfig, Sparsity
 
@@ -154,19 +181,31 @@ def main(argv=None):
     a, dj = synthetic_journal_corpus(
         n_terms=n, n_docs=m, n_journals=cfg.get("n_journals", 5))
     model = EnforcedNMF(NMFConfig(
-        k=k, iters=iters, sparsity=sparsity, solver=args.solver,
-        tol=args.tol, backend=args.backend))
+        k=k, iters=iters, sparsity=sparsity, solver=solver,
+        tol=args.tol, backend=args.backend, mesh_shape=mesh_shape,
+        chunk_docs=chunk_docs))
     t0 = time.time()
     model.fit(a)
     jax.block_until_ready(model.u_)
+    dt = time.time() - t0
     res = model.result_
     stop = " (early stop)" if res.converged else ""
-    print(f"solver={args.solver}: {model.n_iter_} iterations{stop} in "
-          f"{time.time()-t0:.1f}s; "
+    unit = "chunks" if res.error_granularity == "chunk" else "iterations"
+    print(f"solver={solver}: {model.n_iter_} {unit}{stop} in "
+          f"{dt:.1f}s; "
           f"final error {res.final_error:.4f}, "
           f"residual {res.final_residual:.2e}, "
           f"NNZ(U)={res.final_nnz_u}, NNZ(V)={res.final_nnz_v}, "
           f"max stored NNZ={int(res.max_nnz)}")
+    if solver == "streaming":
+        from repro.nmf.solvers import default_chunk_docs
+
+        # docs actually processed: tol can stop the stream mid-corpus
+        w = chunk_docs or default_chunk_docs(m)
+        streamed = min(res.n_iter * w, m)
+        print(f"streamed {streamed} docs in {res.n_iter} chunks "
+              f"({streamed / max(dt, 1e-9):.0f} docs/s, "
+              f"mesh {mesh_shape[0]}x{mesh_shape[1]})")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,10 @@ One import surface over the legacy entry points (``als_nmf``,
 The single-device legacy functions remain public and unchanged; the
 registered solvers are thin strategy wrappers over the shared ALS engine.
 The ``"distributed"`` solver is that same engine shard_mapped over a
-``mesh_shape`` device grid (see :mod:`repro.backend.sharded`).
+``mesh_shape`` device grid (see :mod:`repro.backend.sharded`); the
+``"streaming"`` solver (and ``partial_fit``) is the online
+sufficient-statistics engine (:mod:`repro.core.online`), locally or
+mesh-reduced over the same grid.
 """
 from repro.nmf.config import NMFConfig, Sparsity
 from repro.nmf.estimator import EnforcedNMF

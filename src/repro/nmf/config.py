@@ -24,6 +24,22 @@ __all__ = ["Sparsity", "NMFConfig"]
 _MODES = ("global", "exact", "columnwise")
 
 
+@functools.lru_cache(maxsize=None)
+def _sparsifier_singleton(mode: str, t: int, num_steps: int, fused: bool):
+    """One callable per (mode, budget) — ``functools.partial`` hashes by
+    identity, so without this cache every ``sparsifier()`` call would be a
+    distinct jit-static argument and each ``fit`` / ``partial_fit`` chunk
+    would recompile the engine."""
+    if mode == "columnwise":
+        return functools.partial(topk.topk_project_columns, t_per_col=t)
+    if mode == "exact":
+        return functools.partial(topk.topk_project_exact, t=t)
+    if fused:
+        return topk.FusedReluTopK(t=t, num_steps=num_steps)
+    return functools.partial(topk.topk_project_bisect, t=t,
+                             num_steps=num_steps)
+
+
 @dataclasses.dataclass(frozen=True)
 class Sparsity:
     """Top-t enforcement spec for the two factors (paper Alg. 2 / §4).
@@ -84,21 +100,18 @@ class Sparsity:
                    ) -> Optional[Callable[[jax.Array], jax.Array]]:
         """Hashable callable enforcing this spec on a ``(rows, k)`` factor,
         suitable for the jit-static ``sparsify_*`` arguments of the ALS
-        engine; ``None`` for no enforcement.  ``fused=True`` (only honored
-        in ``"global"`` mode) returns the relu+mask-fusing Pallas epilogue
-        — the bisection threshold is identical, but the two elementwise
-        passes collapse into one VMEM-tiled kernel."""
+        engine; ``None`` for no enforcement.  Equal specs return the *same*
+        callable (module-level cache), so repeated fits / streaming chunks
+        with one budget hit the engines' jit caches instead of recompiling.
+        ``fused=True`` (only honored in ``"global"`` mode) returns the
+        relu+mask-fusing Pallas epilogue — the bisection threshold is
+        identical, but the two elementwise passes collapse into one
+        VMEM-tiled kernel."""
         t = self.resolve(rows, k, which)
         if t is None:
             return None
-        if self.mode == "columnwise":
-            return functools.partial(topk.topk_project_columns, t_per_col=t)
-        if self.mode == "exact":
-            return functools.partial(topk.topk_project_exact, t=t)
-        if fused:
-            return topk.FusedReluTopK(t=t, num_steps=self.num_steps)
-        return functools.partial(topk.topk_project_bisect, t=t,
-                                 num_steps=self.num_steps)
+        return _sparsifier_singleton(self.mode, t, self.num_steps,
+                                     bool(fused) and self.mode == "global")
 
     def apply(self, x: jax.Array, which: str) -> jax.Array:
         """Enforce this spec on a concrete factor matrix (used by
@@ -141,7 +154,7 @@ class NMFConfig:
       the per-block inner-iteration budget (paper Alg. 3).
     * ``sparsity`` — a :class:`Sparsity` spec; the default enforces nothing.
     * ``solver`` — registry name: ``"als"``, ``"enforced"``, ``"sequential"``,
-      or ``"distributed"`` (see :mod:`repro.nmf.registry`).
+      ``"distributed"``, or ``"streaming"`` (see :mod:`repro.nmf.registry`).
     * ``dtype`` — factor dtype name (numpy/scipy inputs are cast to this;
       jax/SpCSR inputs are taken as-is so legacy results match bit-for-bit).
     * ``backend`` — matmul backend for the ALS hot path: ``"jnp-dense"``,
@@ -160,9 +173,16 @@ class NMFConfig:
     * ``block_size`` — topic-block width for the ``"sequential"`` solver
       (must divide ``k``; width 1 is the paper's Fig. 9 fast path).
     * ``mesh_shape`` — ``(rows, cols)`` device grid for the ``"distributed"``
-      solver (rows shard U / A's row blocks on the ``"data"`` mesh axis,
-      cols shard V / A's column blocks on ``"model"``); the default runs
-      on a 1x1 mesh (single device) through the identical shard_map path.
+      and ``"streaming"`` solvers (rows shard U / A's row blocks on the
+      ``"data"`` mesh axis, cols shard V / A's column blocks on
+      ``"model"``); the default runs on a 1x1 mesh (single device) through
+      the identical shard_map path.  With ``solver="streaming"`` a non-1x1
+      grid also routes ``EnforcedNMF.partial_fit`` through the mesh-reduced
+      online engine.
+    * ``chunk_docs`` — documents per column chunk for the ``"streaming"``
+      solver's ``fit`` (``None`` streams in 8 chunks).  ``t_v`` budgets
+      resolve against the *full* corpus and are rescaled per chunk, so
+      per-document sparsity matches a batch fit.
     """
 
     k: int = 5
@@ -176,6 +196,7 @@ class NMFConfig:
     track_error: bool = True
     block_size: int = 1
     mesh_shape: Tuple[int, int] = (1, 1)
+    chunk_docs: Optional[int] = None
 
     def __post_init__(self):
         if self.k <= 0:
@@ -202,11 +223,20 @@ class NMFConfig:
                     f"the distributed solver shards per-device CSR blocks; "
                     f"supported local backends: ['jnp-csr'], got "
                     f"{self.backend!r}")
+            if (self.solver == "streaming" and self.mesh_shape != (1, 1)
+                    and self.backend != "jnp-csr"):
+                raise ValueError(
+                    f"streaming on a mesh shards per-device CSR chunks; "
+                    f"supported local backends: ['jnp-csr'], got "
+                    f"{self.backend!r}")
         if (len(self.mesh_shape) != 2
                 or any(int(s) <= 0 for s in self.mesh_shape)):
             raise ValueError(
                 f"mesh_shape must be a (rows, cols) pair of positive ints, "
                 f"got {self.mesh_shape!r}")
+        if self.chunk_docs is not None and self.chunk_docs <= 0:
+            raise ValueError(
+                f"chunk_docs must be positive, got {self.chunk_docs}")
         jnp.dtype(self.dtype)  # fail fast on bad dtype names
 
     @property

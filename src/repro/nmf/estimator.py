@@ -9,8 +9,13 @@ plus gensim's streaming ``partial_fit``, over the paper's solver family:
 loadings.  ``fit`` dispatches through the solver registry; ``transform``
 folds unseen documents into a fitted topic space with ``U`` frozen (one
 enforced-sparsity least-squares pass — topic inference for new documents);
-``partial_fit`` streams document mini-batches through online ALS with
-accumulated sufficient statistics, gensim-style.
+``partial_fit`` streams document mini-batches through the online engine
+(:mod:`repro.core.online`) with accumulated sufficient statistics,
+gensim-style.  The estimator itself is a thin adapter: the update lives in
+:func:`repro.core.online.online_als_step`, runs through the configured
+matmul backend, and — with ``solver="streaming"`` and a non-1x1
+``mesh_shape`` — executes shard_mapped over a device grid with the
+statistics mesh-reduced (:func:`repro.backend.sharded.make_sharded_online`).
 
 Inputs may be dense ``jax.Array`` / numpy arrays, padded-CSR ``SpCSR``, or
 scipy sparse matrices (term-document matrices from sklearn/gensim
@@ -27,7 +32,10 @@ import numpy as np
 
 from repro.backend import BSROperand, default_backend_name, get_backend
 from repro.core.nmf import (
-    Matrix, _matmul, _matmul_t, _relative_error, init_u0, solve_gram,
+    Matrix, _matmul_t, _relative_error, init_u0, solve_gram,
+)
+from repro.core.online import (
+    OnlineStats, init_online_stats, online_als_step, seed_online_stats,
 )
 from repro.nmf.config import NMFConfig, Sparsity
 from repro.nmf.registry import get_solver
@@ -82,7 +90,7 @@ class EnforcedNMF:
 
     # -- input coercion ------------------------------------------------------
 
-    def _coerce(self, a: ArrayLike) -> Matrix:
+    def _coerce(self, a: ArrayLike, chunkable: bool = False) -> Matrix:
         """Accept jax/numpy dense, SpCSR, BSROperand, or scipy sparse and
         ingest it for ``config.backend``.
 
@@ -91,8 +99,15 @@ class EnforcedNMF:
         scipy sparse takes the device default (Pallas BSR kernels on TPU,
         jnp-csr elsewhere) — never densifying.  An explicit
         ``config.backend`` converts whatever comes in to that backend's
-        operand; numpy/scipy input is cast to ``config.dtype``."""
+        operand; numpy/scipy input is cast to ``config.dtype``.
+
+        ``chunkable=True`` (the streaming ``fit``) keeps a pallas-bsr
+        target in column-sliceable SpCSR form instead — the corpus must be
+        carved into document chunks host-side, and each chunk re-ingests
+        for the configured backend inside ``partial_fit``."""
         name = self.config.backend
+        if chunkable and name == "pallas-bsr":
+            name = "jnp-csr"
         if name is None:
             if isinstance(a, (SpCSR, BSROperand, jax.Array)):
                 return a
@@ -100,8 +115,12 @@ class EnforcedNMF:
                 name = default_backend_name(a)
                 if (name == "pallas-bsr"
                         and self.config.solver in ("sequential",
-                                                   "distributed")):
-                    # those engines dispatch on dense/SpCSR only
+                                                   "distributed",
+                                                   "streaming")):
+                    # sequential/distributed dispatch on dense/SpCSR only;
+                    # the streaming fit carves column chunks host-side,
+                    # which BSR operands cannot do (explicit
+                    # backend="pallas-bsr" still serves partial_fit chunks)
                     name = "jnp-csr"
             else:
                 return jnp.asarray(a, dtype=self.config.jnp_dtype)
@@ -128,7 +147,7 @@ class EnforcedNMF:
         seeded default initial guess (shape (n, k); the sequential solver
         also accepts the (n, block_size) block shape)."""
         cfg = self.config
-        a = self._coerce(a)
+        a = self._coerce(a, chunkable=cfg.solver == "streaming")
         n, m = a.shape
         entry = get_solver(cfg.solver)
         if u0 is None:
@@ -141,9 +160,13 @@ class EnforcedNMF:
         self.n_docs_seen_ = m  # fit is from-scratch; only partial_fit accumulates
         self._m_ref = m
         # seed streaming statistics so partial_fit continues from this fit;
-        # one extra spmm (~1/(2*iters) of the fit) beats pinning the corpus
-        self._gv_acc = self.v_.T @ self.v_
-        self._av_acc = _matmul(a, self.v_)
+        # one extra backend spmm (~1/(2*iters) of the fit) beats pinning
+        # the corpus
+        seed_backend = cfg.backend
+        if cfg.solver == "streaming" and seed_backend == "pallas-bsr":
+            seed_backend = None  # corpus stayed SpCSR for column chunking
+        stats = seed_online_stats(a, self.v_, backend=seed_backend)
+        self._av_acc, self._gv_acc = stats.av, stats.gv
         return self
 
     def fit_transform(self, a: ArrayLike,
@@ -171,15 +194,27 @@ class EnforcedNMF:
         v = solve_gram(u.T @ u, _matmul_t(a_new, u))
         return self._enforce_v(jnp.maximum(v, 0.0))
 
-    def _enforce_v(self, v: jax.Array) -> jax.Array:
+    def _v_sparsity(self, m_new: int) -> Sparsity:
+        """The sparsity spec for an (m_new, k) loadings matrix: absolute
+        whole-factor ``t_v`` budgets are rescaled by ``m_new / m_ref`` so
+        per-document sparsity matches the reference corpus (``transform``
+        fold-ins and ``partial_fit`` chunks share this rule; per-column and
+        fractional budgets resolve against the batch naturally)."""
         sp = self.config.sparsity
         if (sp.t_v is not None and sp.mode != "columnwise"
                 and self._m_ref):
-            t = max(1, round(sp.t_v * v.shape[0] / self._m_ref))
+            t = max(1, round(sp.t_v * m_new / self._m_ref))
             sp = dataclasses.replace(sp, t_v=t)
-        return sp.apply(v, "v")
+        return sp
+
+    def _enforce_v(self, v: jax.Array) -> jax.Array:
+        return self._v_sparsity(v.shape[0]).apply(v, "v")
 
     # -- streaming -----------------------------------------------------------
+
+    def _mesh_streaming(self) -> bool:
+        return (self.config.solver == "streaming"
+                and tuple(self.config.mesh_shape) != (1, 1))
 
     def partial_fit(self, a_chunk: ArrayLike, iters: Optional[int] = None,
                     forget: float = 1.0) -> "EnforcedNMF":
@@ -189,8 +224,16 @@ class EnforcedNMF:
         ``sum V_c^T V_c`` over all chunks seen, so the ``U`` update uses the
         whole stream, not just the newest batch (gensim-style online NMF);
         ``forget`` < 1 exponentially decays old chunks.  ``iters`` defaults
-        to ``min(config.iters, 10)`` inner passes per batch.  ``t_v`` budgets
-        apply per chunk; ``t_u`` to the full factor.
+        to ``min(config.iters, 10)`` inner passes per batch.  Absolute
+        whole-factor ``t_v`` budgets are rescaled by the chunk's share of
+        the reference corpus (see :meth:`transform`), so per-document
+        sparsity is chunk-size invariant; ``t_u`` applies to the full
+        factor.
+
+        The update is one :func:`repro.core.online.online_als_step` through
+        ``config.backend``; with ``solver="streaming"`` and a non-1x1
+        ``mesh_shape`` it runs shard_mapped over the device grid with the
+        chunk's columns sharded and the statistics ``psum``-reduced.
         """
         if not 0.0 < forget <= 1.0:
             raise ValueError(f"forget must be in (0, 1], got {forget}")
@@ -202,30 +245,93 @@ class EnforcedNMF:
             self.u_ = init_u0(jax.random.PRNGKey(cfg.seed), n,
                               cfg.k).astype(cfg.jnp_dtype)
             self.n_features_ = n
-        if self._gv_acc is None:
-            self._gv_acc = jnp.zeros((cfg.k, cfg.k), self.u_.dtype)
-            self._av_acc = jnp.zeros((n, cfg.k), self.u_.dtype)
-
-        sp = cfg.sparsity
-        n_inner = iters if iters is not None else min(cfg.iters, 10)
-        u, v = self.u_, None
-        gv = av = None
-        for _ in range(max(n_inner, 1)):
-            v = solve_gram(u.T @ u, _matmul_t(a_chunk, u))
-            v = sp.apply(jnp.maximum(v, 0.0), "v")
-            gv = forget * self._gv_acc + v.T @ v
-            av = forget * self._av_acc + _matmul(a_chunk, v)
-            u = solve_gram(gv, av)
-            u = sp.apply(jnp.maximum(u, 0.0), "u")
-
-        # the last inner pass already folded this chunk's statistics into
-        # gv/av; committing them avoids recomputing the chunk matmul
-        self._gv_acc, self._av_acc = gv, av
-        self.u_, self.v_ = u, v
-        self.n_docs_seen_ += mc
         if self._m_ref is None:
             self._m_ref = mc
+        if self._gv_acc is None:
+            stats = init_online_stats(n, cfg.k, self.u_.dtype)
+        else:
+            stats = OnlineStats(av=self._av_acc, gv=self._gv_acc)
+
+        n_inner = max(iters if iters is not None else min(cfg.iters, 10), 1)
+        if self._mesh_streaming():
+            res = self._partial_fit_sharded(a_chunk, stats, n_inner, forget)
+        else:
+            sp_u = cfg.sparsity.sparsifier(n, cfg.k, "u")
+            sp_v = self._v_sparsity(mc).sparsifier(mc, cfg.k, "v")
+            res = online_als_step(
+                a_chunk, self.u_, stats, forget, iters=n_inner,
+                sparsify_u=sp_u, sparsify_v=sp_v, backend=cfg.backend)
+
+        self.u_, self.v_ = res.u, res.v
+        self._av_acc, self._gv_acc = res.stats.av, res.stats.gv
+        self.n_docs_seen_ += mc
         return self
+
+    def _partial_fit_sharded(self, a_chunk: Matrix, stats: OnlineStats,
+                             n_inner: int, forget: float):
+        """One online step shard_mapped over the ``config.mesh_shape`` grid:
+        chunk columns sharded on ``"model"``, ``u`` / ``stats.av``
+        row-sharded on ``"data"``, ``stats.gv`` replicated; sparsity
+        enforcement via the histogram :class:`~repro.core.topk.DistTopK`
+        (the mesh counterpart of the local bisection threshold).
+
+        Chunk widths need no mesh alignment: the column count is padded up
+        to a multiple of the cols axis with empty documents — an all-zero
+        column yields an exactly-zero V row and contributes nothing to the
+        statistics — and the returned ``v`` is sliced back.  The *term*
+        axis is a model-lifetime constant and must divide the rows axis.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.backend.sharded import make_sharded_online
+        from repro.compat import set_mesh
+        from repro.core.distributed import distribute_operand
+        from repro.core.topk import DistTopK
+        from repro.launch.mesh import make_nmf_mesh
+        from repro.nmf.solvers import dist_budget
+
+        cfg = self.config
+        n, mc = a_chunk.shape
+        r, c = cfg.mesh_shape
+        if isinstance(a_chunk, BSROperand):
+            raise TypeError(
+                "streaming on a mesh shards per-device CSR chunks; pass "
+                "the chunk as dense / SpCSR / scipy sparse")
+        if n % r:
+            raise ValueError(
+                f"term count {n} must be divisible by the mesh rows "
+                f"axis {r} (mesh_shape {(r, c)})")
+        mc_pad = -(-mc // c) * c
+        if mc_pad != mc:  # pad with empty documents (zero statistics)
+            if isinstance(a_chunk, SpCSR):
+                # widen the logical shape only; no stored entries change
+                a_chunk = SpCSR(a_chunk.values, a_chunk.cols, (n, mc_pad))
+            else:
+                a_chunk = jnp.pad(jnp.asarray(a_chunk),
+                                  ((0, 0), (0, mc_pad - mc)))
+        mesh = make_nmf_mesh(r, c)
+
+        rows_axes, cols_axis = ("data",), "model"
+        t_u = dist_budget(cfg.sparsity, n, cfg.k, "u")
+        t_v = dist_budget(self._v_sparsity(mc), mc, cfg.k, "v")
+        engine = make_sharded_online(
+            mesh, rows_axes, cols_axis,
+            sparsify_u=None if t_u is None else DistTopK(t_u, rows_axes),
+            sparsify_v=None if t_v is None else DistTopK(t_v, (cols_axis,)),
+            inner=cfg.backend or "jnp-csr",
+        )
+        a_spec, u_spec, _ = engine.specs
+        dist = distribute_operand(a_chunk, r, c, mesh, a_spec)
+        u = jax.device_put(self.u_, NamedSharding(mesh, u_spec))
+        stats = OnlineStats(
+            av=jax.device_put(stats.av, NamedSharding(mesh, u_spec)),
+            gv=jax.device_put(stats.gv, NamedSharding(mesh, P())),
+        )
+        with set_mesh(mesh):
+            res = engine(dist, u, stats, n_inner, forget)
+        if mc_pad != mc:  # drop the empty padding documents' loadings
+            res = res._replace(v=res.v[:mc])
+        return res
 
     # -- evaluation ----------------------------------------------------------
 

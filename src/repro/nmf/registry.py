@@ -4,7 +4,10 @@ A solver is a callable ``(a, config, u0) -> FitResult`` where ``a`` is a
 dense ``jax.Array`` or a padded-CSR :class:`repro.sparse.SpCSR` (every solver
 must handle both — the legacy engines already dispatch internally).  Solvers
 self-register at import time via :func:`register_solver`; the estimator looks
-them up by the ``NMFConfig.solver`` name.
+them up by the ``NMFConfig.solver`` name.  Registered today: the batch ALS
+family (``als`` / ``enforced`` / ``distributed`` — one engine, three
+execution modes), the per-block ``sequential`` solver, and ``streaming``
+(the online sufficient-statistics engine over column chunks).
 """
 from __future__ import annotations
 

@@ -24,10 +24,12 @@ class FitResult:
     """Factors plus convergence history.
 
     ``residual`` is always a flat per-iteration trace (for the sequential
-    solver the per-block traces are concatenated in block order).  ``error``
-    is per-iteration for the ALS-family solvers and per-*block* for the
+    solver the per-block traces are concatenated in block order; for the
+    streaming solver one entry per document chunk).  ``error`` is
+    per-iteration for the ALS-family solvers, per-*block* for the
     sequential solver (the legacy semantics — error is only defined once a
-    block has converged); ``error_granularity`` says which.
+    block has converged), and per-*chunk* for the streaming solver;
+    ``error_granularity`` says which.
     """
 
     u: jax.Array                      # (n, k)
@@ -40,7 +42,7 @@ class FitResult:
     converged: bool = False           # early-stop tolerance was reached
     nnz_u: Optional[jax.Array] = None  # (n_iter,) where the solver tracks it
     nnz_v: Optional[jax.Array] = None
-    error_granularity: str = "iteration"   # "iteration" | "block"
+    error_granularity: str = "iteration"   # "iteration" | "block" | "chunk"
 
     @property
     def final_error(self) -> float:

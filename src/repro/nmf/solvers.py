@@ -8,28 +8,50 @@ three execution configurations: the distributed solver only swaps in a
 :class:`repro.backend.sharded.ShardedBackend` and mesh-aware sparsifiers,
 so ``tol`` early-stop chunking, per-iteration ``nnz_u``/``nnz_v``
 trajectories, ``track_error``, and ``FitResult.converged`` behave
-identically on one device or a pod.
+identically on one device or a pod.  The ``streaming`` solver trades the
+batch engine for the online one (:mod:`repro.core.online`): column chunks
+through accumulated sufficient statistics, locally or mesh-reduced.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.nmf import Matrix, als_nmf
+from repro.core.nmf import Matrix, _relative_error, als_nmf
 from repro.core.sequential import sequential_als_nmf
 from repro.kernels.bsr import BSROperand
 from repro.nmf.config import NMFConfig
 from repro.nmf.registry import register_solver
 from repro.nmf.result import FitResult
-from repro.sparse.csr import SpCSR
+from repro.sparse.csr import SpCSR, column_block
 
 __all__ = ["solve_als", "solve_enforced", "solve_sequential",
-           "solve_distributed"]
+           "solve_distributed", "solve_streaming", "dist_budget",
+           "default_chunk_docs"]
 
 #: iteration chunk used when an early-stop tolerance is active — small enough
 #: to stop promptly, large enough that at most two distinct scan lengths are
 #: compiled per run.
 _TOL_CHUNK = 10
+
+
+def default_chunk_docs(m: int) -> int:
+    """Streaming solver's default chunk width (8 chunks over the corpus) —
+    shared with the CLI so reported doc counts stay in sync."""
+    return max(-(-m // 8), 1)
+
+
+def dist_budget(sparsity, rows: int, k: int, which: str):
+    """Whole-factor nonzero budget for the mesh engines'
+    :class:`~repro.core.topk.DistTopK`, which always thresholds the whole
+    (rows, k) factor.  ``columnwise`` budgets are per *column*, so they
+    scale by ``k`` here — total nnz matches the local path, though the
+    histogram threshold does not enforce the per-column distribution."""
+    t = sparsity.resolve(rows, k, which)
+    if t is not None and sparsity.mode == "columnwise":
+        t = min(t * k, rows * k)
+    return t
 
 
 def _reject_bsr_operand(a: Matrix, solver_name: str) -> None:
@@ -134,6 +156,87 @@ def solve_sequential(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
     return FitResult.from_sequential_result(res)
 
 
+@register_solver("streaming")
+def solve_streaming(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
+    """Online ALS (:mod:`repro.core.online`) over column chunks of ``a`` —
+    the corpus is streamed through ``EnforcedNMF.partial_fit`` in
+    ``config.chunk_docs``-document chunks (default: 8 chunks), so peak
+    factor-side memory is one chunk's loadings plus the two sufficient-
+    statistics accumulators, never the full ``V``.
+
+    ``t_v`` budgets resolve against the full corpus and are rescaled per
+    chunk, so per-document sparsity matches a batch fit; each chunk gets
+    ``min(config.iters, 10)`` inner passes.  With a non-1x1
+    ``config.mesh_shape`` every chunk update runs shard_mapped over the
+    device grid with the sufficient statistics mesh-reduced
+    (:func:`repro.backend.sharded.make_sharded_online`) — online NMF on a
+    pod.  ``tol`` early-stops the stream once the cross-chunk relative
+    residual ``||U_c - U_{c-1}||_F / ||U_c||_F`` drops below it.
+
+    The returned history is per *chunk* (``error_granularity="chunk"``):
+    ``residual`` is the cross-chunk U movement, ``error`` the relative
+    reconstruction error of each chunk, and the final ``v`` is one frozen-U
+    fold-in pass over the whole corpus (shape (m, k)).
+    """
+    from repro.nmf.estimator import EnforcedNMF
+
+    if isinstance(a, BSROperand):
+        raise TypeError(
+            "the 'streaming' solver carves column chunks host-side, which "
+            "BSR operands (backend 'pallas-bsr') cannot do; fit with dense "
+            "/ SpCSR / scipy input (partial_fit chunks may still use any "
+            "backend, pallas-bsr included)")
+    n, m = a.shape
+    w = config.chunk_docs or default_chunk_docs(m)
+    model = EnforcedNMF(config)
+    model.u_ = u0
+    model.n_features_ = n
+    model._m_ref = m  # t_v budgets are full-corpus; chunks rescale
+
+    # per-chunk metrics stay device scalars — only the tol check forces a
+    # host sync, so with tol=0 chunk dispatches pipeline freely
+    residuals, errors, nnz_us, nnz_vs = [], [], [], []
+    max_nnz = jnp.sum(u0 != 0).astype(jnp.int32)
+    converged = False
+    lo = 0
+    while lo < m:
+        hi = min(lo + w, m)
+        if isinstance(a, SpCSR):
+            chunk = column_block(a, lo, hi, cap=a.cap)
+        else:
+            chunk = a[:, lo:hi]
+        u_prev = model.u_
+        model.partial_fit(chunk)
+        u, v = model.u_, model.v_
+        num = jnp.linalg.norm(u - u_prev)
+        den = jnp.maximum(jnp.linalg.norm(u), 1e-30)
+        r = num / den
+        residuals.append(r)
+        errors.append(_relative_error(chunk, u, v) if config.track_error
+                      else jnp.float32(0.0))
+        nu = jnp.sum(u != 0).astype(jnp.int32)
+        nv = jnp.sum(v != 0).astype(jnp.int32)
+        nnz_us.append(nu)
+        nnz_vs.append(nv)
+        max_nnz = jnp.maximum(max_nnz, nu + nv)
+        lo = hi
+        if config.tol > 0.0 and float(r) <= config.tol:
+            converged = True
+            break
+
+    v_full = model.transform(a)  # frozen-U fold-in: the corpus loadings
+    return FitResult(
+        u=model.u_, v=v_full,
+        residual=jnp.stack(residuals).astype(jnp.float32),
+        error=jnp.stack(errors).astype(jnp.float32),
+        max_nnz=max_nnz,
+        solver="streaming", n_iter=len(residuals), converged=converged,
+        nnz_u=jnp.stack(nnz_us),
+        nnz_v=jnp.stack(nnz_vs),
+        error_granularity="chunk",
+    )
+
+
 @register_solver("distributed")
 def solve_distributed(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
     """Enforced ALS on a ``config.mesh_shape`` device grid — the *same*
@@ -160,9 +263,7 @@ def solve_distributed(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
 
     from repro.backend.sharded import make_sharded_als
     from repro.compat import set_mesh
-    from repro.core.distributed import (
-        distribute_csr, distribute_csr_from_padded,
-    )
+    from repro.core.distributed import distribute_operand
     from repro.core.topk import DistTopK
     from repro.launch.mesh import make_nmf_mesh
 
@@ -174,14 +275,9 @@ def solve_distributed(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
             f"matrix shape {(n, m)} must be divisible by mesh_shape {(r, c)}")
     mesh = make_nmf_mesh(r, c)
 
-    if isinstance(a, SpCSR):
-        dist = distribute_csr_from_padded(a, r, c)
-    else:
-        dist = distribute_csr(np.asarray(a), r, c)
-
     rows_axes, cols_axis = ("data",), "model"
-    t_u = config.sparsity.resolve(n, config.k, "u")
-    t_v = config.sparsity.resolve(m, config.k, "v")
+    t_u = dist_budget(config.sparsity, n, config.k, "u")
+    t_v = dist_budget(config.sparsity, m, config.k, "v")
     engine = make_sharded_als(
         mesh, rows_axes, cols_axis,
         sparsify_u=None if t_u is None else DistTopK(t_u, rows_axes),
@@ -190,9 +286,7 @@ def solve_distributed(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
         inner=config.backend or "jnp-csr",
     )
     a_spec, u_spec, _ = engine.specs
-    a_sh = NamedSharding(mesh, a_spec)
-    dist = jax.tree_util.tree_map(
-        lambda x: jax.device_put(x, a_sh) if hasattr(x, "ndim") else x, dist)
+    dist = distribute_operand(a, r, c, mesh, a_spec)
     u0 = jax.device_put(u0, NamedSharding(mesh, u_spec))
 
     def run(u_init, iters):

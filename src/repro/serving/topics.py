@@ -6,11 +6,21 @@ into one padded-CSR matrix per tick and folds the whole batch into the fitted
 topic space with a single frozen-``U`` ``transform`` pass — so serving cost
 per tick is one (k x k) solve plus one sparse matmul regardless of how many
 documents share the batch.
+
+Continuous refresh: served documents accumulate in a buffer and
+:meth:`TopicServer.refresh` streams them back into the model through one
+``partial_fit`` (the online sufficient-statistics engine,
+:mod:`repro.core.online`) — so the topic space tracks the live traffic
+distribution without ever re-running a batch fit.  ``refresh_every`` makes
+this automatic; with the estimator configured for mesh streaming
+(``solver="streaming"``, non-1x1 ``mesh_shape``) the refresh update runs
+shard_mapped over the device grid.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -37,9 +47,18 @@ class TopicServer:
     >>> server = TopicServer(fitted_model, max_batch=32)
     >>> server.submit(TopicRequest(rid=0, terms=[(12, 2.0), (80, 1.0)]))
     >>> results = server.run_until_drained()
+    >>> server.refresh()          # fold served docs back into the model
+
+    ``refresh_every`` (documents) triggers :meth:`refresh` automatically
+    from inside :meth:`step`; ``None`` leaves refresh manual.  The buffer
+    of served documents is bounded by ``refresh_buffer`` (oldest dropped),
+    so a long-running server that never refreshes holds at most that many
+    term lists.
     """
 
-    def __init__(self, estimator, max_batch: int = 32):
+    def __init__(self, estimator, max_batch: int = 32,
+                 refresh_every: Optional[int] = None,
+                 refresh_buffer: int = 4096):
         if getattr(estimator, "u_", None) is None:
             raise ValueError("TopicServer needs a fitted EnforcedNMF")
         self.estimator = estimator
@@ -47,26 +66,56 @@ class TopicServer:
         self.n_terms = estimator.n_features_
         self.queue: List[TopicRequest] = []
         self.served = 0
+        self.refresh_every = refresh_every
+        self.refreshed = 0
+        #: served documents awaiting the next model refresh (bounded;
+        #: oldest documents age out once past refresh_buffer).  An
+        #: auto-refresh threshold implies at least that much buffer, or
+        #: the trigger could never fire.
+        self._refresh_buf: Deque[Sequence[Tuple[int, float]]] = deque(
+            maxlen=max(int(refresh_buffer), int(refresh_every or 0), 1))
 
     def submit(self, req: TopicRequest):
         self.queue.append(req)
+
+    def _pack_terms(self, term_lists: Sequence[Sequence[Tuple[int, float]]]):
+        """Bag-of-words term lists -> one (n_terms, n_docs) padded-CSR
+        matrix (out-of-vocabulary term ids dropped) — shared by the serve
+        micro-batch and the refresh chunk."""
+        rows, cols, vals = [], [], []
+        for doc, terms in enumerate(term_lists):
+            for term, weight in terms:
+                if 0 <= term < self.n_terms:
+                    rows.append(term)
+                    cols.append(doc)
+                    vals.append(float(weight))
+        return from_coo(
+            np.asarray(rows, np.int64), np.asarray(cols, np.int64),
+            np.asarray(vals, np.float32), (self.n_terms, len(term_lists)),
+        )
+
+    def refresh(self, iters: Optional[int] = None,
+                forget: float = 1.0) -> int:
+        """Stream the documents served since the last refresh back into the
+        estimator with one ``partial_fit`` — continuous topic-model refresh
+        over the live traffic.  Returns the number of documents folded in
+        (0 when the buffer is empty).  ``iters`` / ``forget`` pass through
+        to :meth:`repro.nmf.EnforcedNMF.partial_fit`."""
+        if not self._refresh_buf:
+            return 0
+        docs = list(self._refresh_buf)
+        self._refresh_buf.clear()
+        self.estimator.partial_fit(self._pack_terms(docs), iters=iters,
+                                   forget=forget)
+        self.refreshed += len(docs)
+        return len(docs)
 
     def step(self) -> Dict[int, List[Tuple[int, float]]]:
         """Serve one micro-batch; returns ``{rid: [(topic, loading), ...]}``."""
         if not self.queue:
             return {}
         batch, self.queue = self.queue[: self.max_batch], self.queue[self.max_batch:]
-        rows, cols, vals = [], [], []
-        for doc, req in enumerate(batch):
-            for term, weight in req.terms:
-                if 0 <= term < self.n_terms:
-                    rows.append(term)
-                    cols.append(doc)
-                    vals.append(float(weight))
-        a_new = from_coo(
-            np.asarray(rows, np.int64), np.asarray(cols, np.int64),
-            np.asarray(vals, np.float32), (self.n_terms, len(batch)),
-        )
+        a_new = self._pack_terms([req.terms for req in batch])
         v = self.estimator.transform(a_new)          # (batch, k)
         order = np.asarray(jnp.argsort(-v, axis=1))
         v_np = np.asarray(v)
@@ -80,6 +129,10 @@ class TopicServer:
             req.topics = picks
             out[req.rid] = picks
         self.served += len(batch)
+        self._refresh_buf.extend(req.terms for req in batch)
+        if (self.refresh_every is not None
+                and len(self._refresh_buf) >= self.refresh_every):
+            self.refresh()
         return out
 
     def run_until_drained(self, max_ticks: int = 1000) -> List[TopicRequest]:

@@ -170,3 +170,96 @@ def spmm_t(a: SpCSR, u: jax.Array) -> jax.Array:
     contrib = a.values[:, :, None] * u[:, None, :]   # (n, cap, k)
     out = jnp.zeros((a.m, k), dtype=u.dtype)
     return out.at[a.cols.ravel()].add(contrib.reshape(-1, k))
+
+
+def _cap_chunking(cap: int, chunk: int):
+    """Chunking of the capacity axis: (full-chunk count, chunk width,
+    remainder width).  The remainder is handled as one static tail slice,
+    so the peak temporary stays ~(rows, chunk, k) for *any* cap — including
+    prime caps, which a divisor-only scheme would silently collapse back to
+    a single full-width chunk."""
+    cw = max(min(int(chunk), cap), 1)
+    return cap // cw, cw, cap % cw
+
+
+def spmm_chunked(a: SpCSR, u: jax.Array, chunk: int = 64,
+                 compute_dtype=None) -> jax.Array:
+    """A @ U accumulated over the capacity axis in ``chunk``-wide slices.
+
+    Peak temporary is ``(n, chunk, k)`` instead of the full ``(n, cap, k)``
+    gather of :func:`spmm` — the deleted distributed fork's trick, which at
+    pod scale was ~GBs per device.  ``compute_dtype`` (e.g. ``bfloat16``)
+    casts the gathered slab and values before the product, halving the
+    inherent nnz*k gather traffic; accumulation is always f32.  Sparse ALS
+    is memory-bound (~0.5 flop/byte), so these constant factors dominate.
+    Result matches :func:`spmm` up to f32 summation-order differences
+    (exactly, when cap fits one chunk and compute_dtype is None).
+    """
+    rows, cap = a.values.shape
+    k = u.shape[1]
+    cd = u.dtype if compute_dtype is None else jnp.dtype(compute_dtype)
+    # accumulate in (at least) f32; f64 operands keep their full precision
+    acc_dtype = jnp.promote_types(u.dtype, jnp.float32)
+    vc = a.values.astype(cd)
+    xc = u.astype(cd)
+    n_full, cw, rem = _cap_chunking(cap, chunk)
+
+    def part(sl_v, sl_c):
+        return jnp.einsum("rc,rck->rk", sl_v, xc[sl_c],
+                          preferred_element_type=acc_dtype)
+
+    def body(i, acc):
+        sl_v = jax.lax.dynamic_slice(vc, (0, i * cw), (rows, cw))
+        sl_c = jax.lax.dynamic_slice(a.cols, (0, i * cw), (rows, cw))
+        return acc + part(sl_v, sl_c)
+
+    out = jax.lax.fori_loop(
+        0, n_full, body, jnp.zeros((rows, k), acc_dtype))
+    if rem:  # static tail slice for caps the chunk width doesn't divide
+        out = out + part(vc[:, n_full * cw:], a.cols[:, n_full * cw:])
+    return out.astype(u.dtype)
+
+
+def spmm_t_chunked(a: SpCSR, u: jax.Array, chunk: int = 64,
+                   compute_dtype=None) -> jax.Array:
+    """A.T @ U scatter-added over the capacity axis in ``chunk``-wide
+    slices — the transpose analogue of :func:`spmm_chunked`, avoiding the
+    ``(n, cap, k)`` contribution temporary of :func:`spmm_t`."""
+    rows, cap = a.values.shape
+    k = u.shape[1]
+    cd = u.dtype if compute_dtype is None else jnp.dtype(compute_dtype)
+    acc_dtype = jnp.promote_types(u.dtype, jnp.float32)
+    vc = a.values.astype(cd)
+    uc = u.astype(cd)
+    n_full, cw, rem = _cap_chunking(cap, chunk)
+
+    def scatter(acc, sl_v, sl_c):
+        contrib = (sl_v[:, :, None] * uc[:, None, :]).astype(acc_dtype)
+        return acc.at[sl_c.ravel()].add(contrib.reshape(-1, k))
+
+    def body(i, acc):
+        sl_v = jax.lax.dynamic_slice(vc, (0, i * cw), (rows, cw))
+        sl_c = jax.lax.dynamic_slice(a.cols, (0, i * cw), (rows, cw))
+        return scatter(acc, sl_v, sl_c)
+
+    out = jax.lax.fori_loop(
+        0, n_full, body, jnp.zeros((a.m, k), acc_dtype))
+    if rem:
+        out = scatter(out, vc[:, n_full * cw:], a.cols[:, n_full * cw:])
+    return out.astype(u.dtype)
+
+
+def column_block(a: SpCSR, lo: int, hi: int, cap: int | None = None) -> SpCSR:
+    """Host-side column slice ``a[:, lo:hi]`` with rebased column ids —
+    how the streaming solver carves document chunks out of a padded-CSR
+    corpus without densifying.  Work and temporaries are nnz-proportional.
+    Pass ``cap=a.cap`` to pin every chunk to the same slot capacity so the
+    jitted online step compiles once across the stream."""
+    if not 0 <= lo < hi <= a.m:
+        raise ValueError(f"bad column range [{lo}, {hi}) for m={a.m}")
+    values = np.asarray(a.values)
+    cols = np.asarray(a.cols)
+    mask = (values != 0) & (cols >= lo) & (cols < hi)
+    rows = np.broadcast_to(np.arange(a.n)[:, None], cols.shape)[mask]
+    return from_coo(rows, cols[mask] - lo, values[mask], (a.n, hi - lo),
+                    cap=cap)

@@ -384,3 +384,79 @@ def test_pallas_backend_dense_input_roundtrip(corpus):
     m_ref = EnforcedNMF(cfg.replace(backend=None)).fit(a)
     np.testing.assert_allclose(np.asarray(m.result_.residual),
                                np.asarray(m_ref.result_.residual), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Chunked / bf16 capacity-axis spmm (the deleted distributed fork's local
+# spmm, folded into the jnp-csr backend)
+# ---------------------------------------------------------------------------
+
+def test_spmm_chunked_matches_plain_einsum(corpus):
+    """Capacity-axis chunked accumulation == the plain gather einsum, up to
+    f32 summation order, across chunk widths that do / don't divide cap."""
+    from repro.sparse import spmm, spmm_chunked, spmm_t, spmm_t_chunked
+
+    x = jax.random.uniform(jax.random.PRNGKey(3), (corpus.m, 5))
+    u = jax.random.uniform(jax.random.PRNGKey(4), (corpus.n, 5))
+    ref = spmm(corpus, x)
+    ref_t = spmm_t(corpus, u)
+    for chunk in (1, 3, corpus.cap, 10 * corpus.cap):
+        np.testing.assert_allclose(np.asarray(spmm_chunked(corpus, x, chunk)),
+                                   np.asarray(ref), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(spmm_t_chunked(corpus, u, chunk)),
+            np.asarray(ref_t), rtol=1e-5, atol=1e-5)
+    # prime cap: the remainder tail keeps the peak temporary at ~chunk
+    # width instead of silently collapsing to one full-width slice
+    from repro.sparse.csr import _cap_chunking
+
+    assert _cap_chunking(13, 4) == (3, 4, 1)
+    assert _cap_chunking(127, 64) == (1, 64, 63)
+    rng = np.random.default_rng(8)
+    dense = rng.random((40, 30)).astype(np.float32)
+    dense[rng.random((40, 30)) > 0.4] = 0
+    prime = from_dense(jnp.asarray(dense), cap=13)
+    assert prime.cap == 13
+    xp = jax.random.uniform(jax.random.PRNGKey(9), (30, 5))
+    np.testing.assert_allclose(np.asarray(spmm_chunked(prime, xp, chunk=4)),
+                               np.asarray(spmm(prime, xp)),
+                               rtol=1e-5, atol=1e-5)
+    up = jax.random.uniform(jax.random.PRNGKey(10), (40, 5))
+    np.testing.assert_allclose(
+        np.asarray(spmm_t_chunked(prime, up, chunk=4)),
+        np.asarray(spmm_t(prime, up)), rtol=1e-5, atol=1e-5)
+
+
+def test_spmm_chunked_bf16_parity(corpus):
+    """bf16 gather with f32 accumulation tracks the f32 path within bf16
+    tolerance (the fork's traffic-halving trick)."""
+    from repro.sparse import spmm, spmm_chunked
+
+    x = jax.random.uniform(jax.random.PRNGKey(5), (corpus.m, 5))
+    ref = np.asarray(spmm(corpus, x))
+    out = np.asarray(spmm_chunked(corpus, x, chunk=4,
+                                  compute_dtype=jnp.bfloat16))
+    assert out.dtype == ref.dtype  # result dtype is preserved
+    np.testing.assert_allclose(out, ref, rtol=2e-2, atol=2e-2 * ref.max())
+
+
+def test_jnp_csr_backend_size_trigger(monkeypatch, corpus):
+    """Once the (rows, cap, k) temporary crosses the trigger, the jnp-csr
+    backend products switch to the chunked path — same results."""
+    from repro.backend import jnp_backends
+
+    be = get_backend("jnp-csr")
+    x = jax.random.uniform(jax.random.PRNGKey(6), (corpus.m, 5))
+    u = jax.random.uniform(jax.random.PRNGKey(7), (corpus.n, 5))
+    plain = np.asarray(be.matmul(corpus, x))
+    plain_t = np.asarray(be.matmul_t(corpus, u))
+    monkeypatch.setattr(jnp_backends, "SPMM_CHUNK_ELEMS", 1)
+    monkeypatch.setattr(jnp_backends, "SPMM_CHUNK_WIDTH", 3)
+    assert jnp_backends._chunked_spmm_config(corpus, 5) == (True, None)
+    np.testing.assert_allclose(np.asarray(be.matmul(corpus, x)), plain,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(be.matmul_t(corpus, u)), plain_t,
+                               rtol=1e-5, atol=1e-5)
+    # default trigger leaves small problems on the one-shot einsum path
+    monkeypatch.undo()
+    assert jnp_backends._chunked_spmm_config(corpus, 5) == (False, None)
