@@ -1,15 +1,20 @@
-"""Sharded-engine benchmark: the unified ALS engine on 1x1 vs 2x2 meshes.
+"""Sharded-engine benchmark: the unified ALS engine on 1x1 vs 2x2 meshes,
+swept over the inner per-shard backends (jnp-csr CSR shards vs pallas-bsr
+per-device MXU tile grids).
 
 Measures what the mesh-native execution layer costs and buys — shard
-ingest (``distribute_csr_from_padded``), compile, and the warm solve loop
-— on forced host devices, plus the single-device ``enforced`` solver as
-the no-shard_map reference.  Writes ``BENCH_sharded.json`` so the
-collective-overhead trajectory has data on every push.
+ingest (``engine.distribute``: ``distribute_csr_from_padded`` or
+``distribute_bsr``), compile, and the warm solve loop — on forced host
+devices, plus the single-device ``enforced`` solver as the no-shard_map
+reference.  Writes ``BENCH_sharded.json`` so the collective-overhead and
+per-inner-backend trajectories have data on every push.
 
 On CPU the forced host devices share the same cores, so 2x2 is *not*
-expected to be faster — the number that matters here is the shard_map /
-psum overhead over the 1x1 run (on a real pod the same code path scales
-the paper's Fig. 10 workload).
+expected to be faster, and the Pallas kernels execute in interpret mode
+(numerics validation, not a speed signal) — the numbers that matter here
+are the shard_map / psum overhead over the 1x1 run and the per-backend
+ingest cost (on a real pod the same code paths scale the paper's Fig. 10
+workload with the MXU kernels compiled).
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
         PYTHONPATH=src python benchmarks/bench_sharded.py --smoke
@@ -38,13 +43,12 @@ def _timed(fn, repeats=3):
     return (time.perf_counter() - t0) / repeats
 
 
-def bench(n: int, m: int, k: int, iters: int, grids, seed: int = 0):
+def bench(n: int, m: int, k: int, iters: int, grids, inners, seed: int = 0):
     from jax.sharding import NamedSharding
 
     from repro.backend.sharded import make_sharded_als
     from repro.compat import set_mesh
     from repro.core import init_u0
-    from repro.core.distributed import distribute_csr_from_padded
     from repro.core.topk import DistTopK
     from repro.data import synthetic_journal_corpus
     from repro.launch.mesh import make_nmf_mesh
@@ -71,36 +75,44 @@ def bench(n: int, m: int, k: int, iters: int, grids, seed: int = 0):
 
     for r, c in grids:
         if len(jax.devices()) < r * c or n % r or m % c:
-            results[f"{r}x{c}"] = {"status": "skipped"}
+            for inner in inners:
+                results[f"{r}x{c}[{inner}]"] = {"status": "skipped"}
             continue
         mesh = make_nmf_mesh(r, c)
-        t0 = time.perf_counter()
-        dist = distribute_csr_from_padded(a_sp, r, c)
-        ingest_s = time.perf_counter() - t0
-        run = make_sharded_als(
-            mesh, ("data",), "model",
-            sparsify_u=DistTopK(t_u, ("data",)),
-            sparsify_v=DistTopK(t_v, ("model",)),
-            track_error=False,
-        )
-        a_spec, u_spec, _ = run.specs
-        a_sh = NamedSharding(mesh, a_spec)
-        dist = jax.tree_util.tree_map(lambda x: jax.device_put(x, a_sh), dist)
-        u0d = jax.device_put(u0, NamedSharding(mesh, u_spec))
-        with set_mesh(mesh):
+        for inner in inners:
+            run = make_sharded_als(
+                mesh, ("data",), "model",
+                sparsify_u=DistTopK(t_u, ("data",)),
+                sparsify_v=DistTopK(t_v, ("model",)),
+                track_error=False,
+                inner=inner,
+            )
+            _, u_spec, _ = run.specs
             t0 = time.perf_counter()
-            res = run(dist, u0d, iters)
-            jax.block_until_ready(res.u)
-            first_s = time.perf_counter() - t0
-            solve_s = _timed(lambda: run(dist, u0d, iters).u)
-        results[f"{r}x{c}"] = {
-            "ingest_s": ingest_s,
-            "compile_plus_first_run_s": first_s,
-            "solve_s": solve_s,
-            "per_iter_ms": solve_s / iters * 1e3,
-            "final_residual": float(res.residual[-1]),
-            "max_nnz": int(res.max_nnz),
-        }
+            dist = run.distribute(a_sp)
+            jax.block_until_ready(jax.tree_util.tree_leaves(dist))
+            ingest_s = time.perf_counter() - t0
+            u_sh = NamedSharding(mesh, u_spec)
+
+            def u_fresh():
+                # the jitted step donates its u argument — hand every call
+                # a real copy so the timing loop can repeat
+                return jax.device_put(jnp.array(u0, copy=True), u_sh)
+
+            with set_mesh(mesh):
+                t0 = time.perf_counter()
+                res = run(dist, u_fresh(), iters)
+                jax.block_until_ready(res.u)
+                first_s = time.perf_counter() - t0
+                solve_s = _timed(lambda: run(dist, u_fresh(), iters).u)
+            results[f"{r}x{c}[{inner}]"] = {
+                "ingest_s": ingest_s,
+                "compile_plus_first_run_s": first_s,
+                "solve_s": solve_s,
+                "per_iter_ms": solve_s / iters * 1e3,
+                "final_residual": float(res.residual[-1]),
+                "max_nnz": int(res.max_nnz),
+            }
     return results
 
 
@@ -108,9 +120,12 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small corpus so the shard_map path runs on every "
-                         "CI push with 4 forced host devices")
+                         "CI push with 4 forced host devices (pallas-bsr "
+                         "shards execute in interpret mode)")
     ap.add_argument("--full", action="store_true",
                     help="large-synthetic corpus (paper Fig. 10 scale)")
+    ap.add_argument("--inners", default="jnp-csr,pallas-bsr",
+                    help="comma-separated inner per-shard backends to sweep")
     ap.add_argument("--out", default="BENCH_sharded.json")
     args = ap.parse_args(argv)
 
@@ -121,11 +136,13 @@ def main(argv=None) -> int:
     else:
         n, m, k, iters = 2048, 1024, 8, 8
     grids = [(1, 1), (2, 2)]
-    results = bench(n, m, k, iters, grids)
+    inners = [s.strip() for s in args.inners.split(",") if s.strip()]
+    results = bench(n, m, k, iters, grids, inners)
 
     payload = {
         "shape": {"n": n, "m": m, "k": k, "iters": iters},
         "grids": ["%dx%d" % g for g in grids],
+        "inner_backends": inners,
         "devices": len(jax.devices()),
         "device_kind": jax.default_backend(),
         "platform": platform.platform(),

@@ -98,6 +98,20 @@ class MatmulBackend(Protocol):
         """Global ``||A - U V^T||_F / ||A||_F``."""
         ...
 
+    def local_sqnorm(self, a) -> jax.Array:
+        """``||A||_F^2`` of one *native* operand, with no reduction applied —
+        the per-shard contribution :class:`repro.backend.sharded.ShardedBackend`
+        psums (on one device it equals ``sqnorm``)."""
+        ...
+
+    def local_dot(self, a, u: jax.Array, v: jax.Array) -> jax.Array:
+        """``<A, U V^T>`` over one native operand's stored nonzeros, with no
+        reduction applied — the relative-error cross term per shard.  Keeping
+        this on the *inner* backend is what lets the sharded execution layer
+        carry any local operand (padded CSR, BSR tiles, ...) without
+        hard-coding a format."""
+        ...
+
 
 class LocalExecution:
     """Single-device execution hooks shared by the local backends.
@@ -125,6 +139,11 @@ class LocalExecution:
         from repro.core.nmf import _relative_error
 
         return _relative_error(a, u, v, a_sqnorm)
+
+    def local_sqnorm(self, a):
+        from repro.core.nmf import _sqnorm
+
+        return _sqnorm(a)
 
 
 _REGISTRY: Dict[str, MatmulBackend] = {}

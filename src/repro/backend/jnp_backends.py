@@ -78,6 +78,9 @@ class JnpDenseBackend(LocalExecution):
     def gram(self, x):
         return x.T @ x
 
+    def local_dot(self, a, u, v):
+        return jnp.sum(a * (u @ v.T))
+
 
 class JnpCsrBackend(LocalExecution):
     """Padded-CSR gather/scatter products on ``SpCSR`` operands."""
@@ -115,6 +118,16 @@ class JnpCsrBackend(LocalExecution):
 
     def gram(self, x):
         return x.T @ x
+
+    def local_dot(self, a, u, v):
+        """<A, U V^T> over the stored slots: the padded-CSR (row, col)
+        pairs index the factors directly (under a shard_map the local ids
+        index the local factor shards, so this *is* the per-shard cross
+        contribution)."""
+        rows = jnp.broadcast_to(
+            jnp.arange(a.values.shape[0])[:, None], a.cols.shape)
+        dots = jnp.sum(u[rows] * v[a.cols], axis=-1)
+        return jnp.sum(a.values * dots)
 
 
 register_backend(JnpDenseBackend())

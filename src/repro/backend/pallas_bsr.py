@@ -55,5 +55,10 @@ class PallasBsrBackend(LocalExecution):
         # the factor dtype (parity with the jnp backends)
         return gram_matrix(x).astype(x.dtype)
 
+    def local_dot(self, a: BSROperand, u: jax.Array, v: jax.Array) -> jax.Array:
+        from repro.kernels.bsr import bsr_dot_uv
+
+        return bsr_dot_uv(a.bsr, u, v)
+
 
 register_backend(PallasBsrBackend())

@@ -3,15 +3,18 @@
 Layout (DESIGN.md §4):
 
 * A (n x m) is 2-D sharded: rows over R = pod x data, columns over C = model.
-  Each shard holds *local padded CSR in both orientations* (A_ij and A_ij^T)
-  so both ALS half-steps are scatter-free.
+  Each shard holds its local block in both orientations (A_ij and A_ij^T)
+  so both ALS half-steps are scatter-free.  Two local formats exist —
+  *padded CSR* (:class:`DistCSR`, the ``jnp-csr`` inner backend) and
+  *BSR tile grids* (:class:`DistBSR`, the ``pallas-bsr`` inner backend:
+  dense MXU tiles at sparse block coordinates, per device).
 * U (n x k): row-sharded over R, replicated over C.
 * V (m x k): row-sharded over C, replicated over R.
 
-This module is host-side only: it builds the :class:`DistCSR` shard grid
-(nnz-proportional packing, never materializing a dense (n, m) matrix from
-sparse input) and the PartitionSpecs.  The execution itself is the shared
-ALS engine (:func:`repro.core.nmf.als_nmf`) run under a shard_map with a
+This module is host-side only: it builds the shard grids (nnz-proportional
+packing, never materializing a dense (n, m) matrix from sparse input) and
+the PartitionSpecs.  The execution itself is the shared ALS engine
+(:func:`repro.core.nmf.als_nmf`) run under a shard_map with a
 :class:`repro.backend.sharded.ShardedBackend` — see
 :func:`repro.backend.sharded.make_sharded_als`; there is no separate
 distributed solver loop anymore.
@@ -19,6 +22,7 @@ distributed solver loop anymore.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Tuple
 
 import jax
@@ -26,8 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["DistCSR", "distribute_csr", "distribute_csr_from_padded",
-           "distribute_operand", "make_dist_specs"]
+__all__ = ["DistCSR", "DistBSR", "distribute_csr",
+           "distribute_csr_from_padded", "distribute_bsr",
+           "make_dist_specs"]
 
 
 # ---------------------------------------------------------------------------
@@ -130,22 +135,159 @@ def distribute_csr_from_padded(a, r: int, c: int) -> DistCSR:
     return _distribute_coo(rows_e, cols[mask], values[mask], n, m, r, c)
 
 
-def distribute_operand(a, r: int, c: int, mesh, a_spec) -> DistCSR:
-    """Dense-or-SpCSR operand -> (R, C) shard grid, device_put with the
-    mesh sharding — the shared ingest step of every mesh engine entry
-    point (batch ``solve_distributed`` and streaming
-    ``_partial_fit_sharded``)."""
-    from jax.sharding import NamedSharding
-
+def _coo_of(a, dtype=None):
+    """Host element COO ``(rows, cols, vals, (n, m))`` of any ingest-front-
+    door operand — scipy sparse, ``SpCSR``, ``BSR``/``BSROperand``, or a
+    dense array.  Work and temporaries are proportional to the *stored*
+    entries for every sparse form; only a dense input touches n*m."""
+    from repro.kernels.bsr import BSR, BSROperand, bsr_to_coo
     from repro.sparse.csr import SpCSR
 
-    if isinstance(a, SpCSR):
-        dist = distribute_csr_from_padded(a, r, c)
+    if isinstance(a, BSROperand):
+        rows, cols, vals = bsr_to_coo(a.bsr)
+        shape = a.shape
+    elif isinstance(a, BSR):
+        rows, cols, vals = bsr_to_coo(a)
+        shape = a.shape
+    elif isinstance(a, SpCSR):
+        values = np.asarray(a.values)
+        mask = values != 0
+        rows = np.broadcast_to(
+            np.arange(a.shape[0])[:, None], values.shape)[mask]
+        cols = np.asarray(a.cols)[mask]
+        vals = values[mask]
+        shape = a.shape
+    elif hasattr(a, "tocoo"):  # scipy sparse, without a hard import
+        coo = a.tocoo()
+        coo.sum_duplicates()
+        coo.eliminate_zeros()
+        rows, cols, vals = coo.row, coo.col, coo.data
+        shape = coo.shape
     else:
-        dist = distribute_csr(np.asarray(a), r, c)
-    a_sh = NamedSharding(mesh, a_spec)
-    return jax.tree_util.tree_map(
-        lambda x: jax.device_put(x, a_sh) if hasattr(x, "ndim") else x, dist)
+        a = np.asarray(a)
+        rows, cols = np.nonzero(a)
+        vals = a[rows, cols]
+        shape = a.shape
+    if dtype is not None:
+        vals = vals.astype(dtype)
+    return (np.asarray(rows, np.int64), np.asarray(cols, np.int64),
+            vals, tuple(shape))
+
+
+# ---------------------------------------------------------------------------
+# Distributed BSR tile grids (the pallas-bsr inner backend's shard format)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DistBSR:
+    """(R, C) grid of local BSR tile sets; leading two axes are sharded.
+
+    ``tiles``/``block_cols``: (R, C, nrb, bcap, bm, bk) / (R, C, nrb, bcap)
+    — each device's A_ij block as dense MXU tiles at sparse block
+    coordinates, with *local* block-column ids.  ``tiles_t``/
+    ``block_cols_t`` hold the transposed orientation (tile dims (bk, bm)),
+    so A^T @ U is the same streaming-tile kernel scatter-free.  ``bcap`` is
+    a static per-shard slot capacity shared by the whole grid.
+    """
+    tiles: jax.Array
+    block_cols: jax.Array
+    tiles_t: jax.Array
+    block_cols_t: jax.Array
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+
+def _pack_bsr_shards(rows, cols, vals, r: int, c: int, n_loc: int,
+                     m_loc: int, bm: int, bk: int, bcap, transposed: bool):
+    """Vectorized host packing of element COO into the (R, C, nrb, bcap,
+    tile_rows, tile_cols) per-device BSR layout.  ``transposed=True`` packs
+    the A^T orientation (each shard's local rows are its original columns,
+    tiles are (bk, bm)) while keeping the (R, C) grid indexed by A's block
+    coordinates.  Row-blocks with more occupied tiles than ``bcap`` keep
+    the ``bcap`` largest-Frobenius-norm tiles, with a warning — the
+    :func:`repro.kernels.bsr.bsr_from_scipy` truncation policy applied
+    per shard."""
+    from repro.kernels.bsr import _keep_top_per_group
+
+    si = rows // n_loc
+    sj = cols // m_loc
+    if transposed:
+        line_r, line_c = cols % m_loc, rows % n_loc
+        loc_r, loc_c = m_loc, n_loc
+        tile_r, tile_c = bk, bm
+    else:
+        line_r, line_c = rows % n_loc, cols % m_loc
+        loc_r, loc_c = n_loc, m_loc
+        tile_r, tile_c = bm, bk
+    nrb = -(-loc_r // tile_r)
+    ncb = -(-loc_c // tile_c)
+    bi = line_r // tile_r
+    bj = line_c // tile_c
+    shard = si.astype(np.int64) * c + sj
+    tile_id = (shard * nrb + bi) * ncb + bj
+    uniq, inv = np.unique(tile_id, return_inverse=True)
+    sqnorms = np.zeros(len(uniq), dtype=np.float64)
+    np.add.at(sqnorms, inv, vals.astype(np.float64) ** 2)
+    row_group = uniq // ncb  # (shard * nrb + bi): row-block id across shards
+    ngroups = r * c * nrb
+    cap = bcap
+    if cap is None:
+        counts = np.bincount(row_group, minlength=ngroups)
+        cap = max(int(counts.max(initial=1)), 1)
+    keep, slot, counts = _keep_top_per_group(row_group, sqnorms, ngroups, cap)
+    if (counts > cap).any():
+        orient = "transposed " if transposed else ""
+        warnings.warn(
+            f"distribute_bsr: {int((counts > cap).sum())} {orient}row-blocks "
+            f"exceed bcap={cap}; keeping the {cap} largest-Frobenius-norm "
+            "tiles per row-block",
+            stacklevel=3,
+        )
+    tiles = np.zeros((r, c, nrb, cap, tile_r, tile_c), dtype=vals.dtype)
+    bcols = np.zeros((r, c, nrb, cap), dtype=np.int32)
+    kept_e = keep[inv]
+    np.add.at(
+        tiles,
+        (si[kept_e], sj[kept_e], bi[kept_e], slot[inv[kept_e]],
+         line_r[kept_e] % tile_r, line_c[kept_e] % tile_c),
+        vals[kept_e])
+    u = uniq[keep]
+    ubj = (u % ncb).astype(np.int32)
+    rest = u // ncb
+    ubi = rest % nrb
+    ush = rest // nrb
+    bcols[ush // c, ush % c, ubi, slot[keep]] = ubj
+    return tiles, bcols
+
+
+def distribute_bsr(a, r: int, c: int, *, bm: int = 128, bk: int = 128,
+                   bcap: int | None = None, bcap_t: int | None = None,
+                   dtype=None) -> DistBSR:
+    """Tile-wise ingest for the mesh ``pallas-bsr`` inner backend: carve
+    any operand (scipy sparse, ``SpCSR``, ``BSROperand``, dense) into the
+    (R, C) grid of per-device BSR blocks, both orientations, padded to a
+    static per-shard ``bcap`` (``None``: the grid-wide max occupancy, no
+    truncation).  Host work and temporaries are proportional to the stored
+    entries plus the tile volume — the dense (n, m) matrix is never
+    materialized from sparse input.  Each device then feeds its tiles
+    straight to the MXU streaming-tile kernels inside the shard_map."""
+    rows_e, cols_e, vals_e, (n, m) = _coo_of(a, dtype=dtype)
+    if n % r or m % c:
+        raise ValueError(
+            f"matrix shape {(n, m)} must be divisible by the shard grid "
+            f"{(r, c)}")
+    n_loc, m_loc = n // r, m // c
+    vals_e = vals_e if vals_e.dtype.kind == "f" else vals_e.astype(np.float32)
+    tiles, bcols = _pack_bsr_shards(
+        rows_e, cols_e, vals_e, r, c, n_loc, m_loc, bm, bk, bcap,
+        transposed=False)
+    tiles_t, bcols_t = _pack_bsr_shards(
+        rows_e, cols_e, vals_e, r, c, n_loc, m_loc, bm, bk, bcap_t,
+        transposed=True)
+    return DistBSR(
+        jnp.asarray(tiles), jnp.asarray(bcols),
+        jnp.asarray(tiles_t), jnp.asarray(bcols_t), (n, m)
+    )
 
 
 def make_dist_specs(rows_axes: Tuple[str, ...], cols_axis: str):

@@ -103,24 +103,13 @@ def _sqnorm(a: Matrix) -> jax.Array:
 def _bsr_relative_error(a: BSROperand, u: jax.Array, v: jax.Array,
                         a_sqnorm: jax.Array) -> jax.Array:
     """||A - UV^T||_F / ||A||_F with the cross term <A, UV^T> contracted
-    tile-wise: sum over occupied tiles of sum(tile * (U_blk V_blk^T)).
-    Peak temporary is ~tile_volume * k / bk — a bk-fold saving over
-    flattening the tiles to COO and gathering (tile_volume, k) slabs of U
-    and V, which mattered at exactly the large-A scale this operand
-    targets."""
-    bsr = a.bsr
-    nrb, bcap, bm, bk = bsr.tiles.shape
-    n, m = a.shape
-    k = u.shape[1]
+    tile-wise (:func:`repro.kernels.bsr.bsr_dot_uv`), which mattered at
+    exactly the large-A scale this operand targets."""
+    from repro.kernels.bsr import bsr_dot_uv
+
     uf = u.astype(jnp.float32)
     vf = v.astype(jnp.float32)
-    u_blk = jnp.pad(uf, ((0, nrb * bm - n), (0, 0))).reshape(nrb, bm, k)
-    ncb = -(-m // bk)
-    v_blk = jnp.pad(vf, ((0, ncb * bk - m), (0, 0))).reshape(ncb, bk, k)
-    v_blk = v_blk[bsr.block_cols]  # (nrb, bcap, bk, k); padded slots see
-    # block 0, harmless: their tiles are all-zero
-    cross = jnp.einsum("isrc,ird,iscd->",
-                       bsr.tiles.astype(jnp.float32), u_blk, v_blk)
+    cross = bsr_dot_uv(a.bsr, u, v)
     approx_sq = jnp.sum((uf.T @ uf) * (vf.T @ vf))
     err_sq = jnp.maximum(a_sqnorm - 2.0 * cross + approx_sq, 0.0)
     return jnp.sqrt(err_sq) / jnp.sqrt(jnp.maximum(a_sqnorm, 1e-30))

@@ -256,12 +256,14 @@ def topk_project_columns(x: jax.Array, t_per_col: int) -> jax.Array:
     if t >= n:
         return x
     absx = jnp.abs(x)
-    # top_k works over the last axis; transpose so columns become rows.
-    kth = jax.lax.top_k(absx.T, t)[0][:, -1]  # (k,) per-column threshold
-    keep = absx >= kth[None, :]
-    # Ties could keep >t per column; break ties exactly like the exact
-    # variant by limiting to the first t occurrences per column.
+    # One descending argsort per column; the rank of entry order[i, j] is i
+    # by construction, so a single scatter inverts the permutation — the
+    # second full argsort this replaces doubled the per-column sort work.
+    # rank < t alone keeps exactly the t largest per column with ties
+    # broken in sort order, matching the old top_k-threshold & rank mask.
     order = jnp.argsort(-absx, axis=0)  # (n, k) descending per column
-    rank = jnp.argsort(order, axis=0)
-    keep = keep & (rank < t)
-    return jnp.where(keep, x, 0)
+    col_ids = jnp.broadcast_to(jnp.arange(k)[None, :], (n, k))
+    ranks = jnp.broadcast_to(jnp.arange(n)[:, None], (n, k))
+    rank = jnp.zeros((n, k), jnp.int32).at[order, col_ids].set(
+        ranks.astype(jnp.int32))
+    return jnp.where(rank < t, x, 0)

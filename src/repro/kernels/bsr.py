@@ -86,7 +86,15 @@ class BSROperand:
 
 
 def bsr_from_dense(a: np.ndarray, bm: int = 128, bk: int = 128, bcap: int | None = None) -> BSR:
-    """Host-side conversion (numpy).  Pads n, m up to block multiples."""
+    """Host-side conversion (numpy).  Pads n, m up to block multiples.
+
+    Fully vectorized: occupied blocks scatter into their slots through the
+    same :func:`_keep_top_per_group` machinery as :func:`bsr_from_scipy`,
+    so large dense fixtures ingest in numpy time rather than a Python
+    double loop.  An explicit ``bcap`` below a row-block's occupancy keeps
+    its ``bcap`` largest-Frobenius-norm blocks and warns (the scipy-ingest
+    truncation policy; the old loop silently kept the first ``bcap``).
+    """
     a = np.asarray(a)
     n, m = a.shape
     n_pad = (-n) % bm
@@ -94,17 +102,25 @@ def bsr_from_dense(a: np.ndarray, bm: int = 128, bk: int = 128, bcap: int | None
     ap = np.pad(a, ((0, n_pad), (0, m_pad)))
     nrb, ncb = ap.shape[0] // bm, ap.shape[1] // bk
     blocked = ap.reshape(nrb, bm, ncb, bk).transpose(0, 2, 1, 3)  # (nrb, ncb, bm, bk)
-    occupied = (np.abs(blocked) > 0).any(axis=(2, 3))             # (nrb, ncb)
-    max_cap = int(occupied.sum(axis=1).max(initial=1))
-    if bcap is None:
-        bcap = max(max_cap, 1)
-    tiles = np.zeros((nrb, bcap, bm, bk), dtype=a.dtype)
-    bcols = np.zeros((nrb, bcap), dtype=np.int32)
-    for i in range(nrb):
-        js = np.nonzero(occupied[i])[0][:bcap]
-        for s, j in enumerate(js):
-            tiles[i, s] = blocked[i, j]
-            bcols[i, s] = j
+    block_sq = (blocked.astype(np.float64) ** 2).sum(axis=(2, 3))  # (nrb, ncb)
+    occ_i, occ_j = np.nonzero(block_sq > 0)  # row-major: ascending j within i
+    cap = bcap
+    if cap is None:
+        cap = max(int(np.bincount(occ_i, minlength=nrb).max(initial=1)), 1)
+    keep, slots, counts = _keep_top_per_group(
+        occ_i, block_sq[occ_i, occ_j], nrb, cap)
+    if (counts > cap).any():
+        warnings.warn(
+            f"bsr_from_dense: {int((counts > cap).sum())} row-blocks exceed "
+            f"bcap={cap}; keeping the {cap} largest-Frobenius-norm "
+            "blocks per row-block",
+            stacklevel=2,
+        )
+    tiles = np.zeros((nrb, cap, bm, bk), dtype=a.dtype)
+    bcols = np.zeros((nrb, cap), dtype=np.int32)
+    i_k, j_k, s_k = occ_i[keep], occ_j[keep], slots[keep]
+    tiles[i_k, s_k] = blocked[i_k, j_k]
+    bcols[i_k, s_k] = j_k
     return BSR(jnp.asarray(tiles), jnp.asarray(bcols), (n, m))
 
 
@@ -186,6 +202,42 @@ def bsr_from_scipy(sp_matrix, bm: int = 128, bk: int = 128,
     np.add.at(tiles, (e_bi, e_slot, e_r, e_c), data[kept_uniq])
     bcols[ubi[keep_block], slot[keep_block]] = ubj[keep_block]
     return BSR(jnp.asarray(tiles), jnp.asarray(bcols), (n, m))
+
+
+def bsr_dot_uv(a: BSR, u: jax.Array, v: jax.Array) -> jax.Array:
+    """``<A, U V^T>`` contracted tile-wise: sum over occupied tiles of
+    ``sum(tile * (U_blk V_blk^T))``, accumulated in f32.  Peak temporary is
+    ~tile_volume * k / bk — a bk-fold saving over flattening the tiles to
+    COO and gathering (tile_volume, k) slabs of U and V.  This is the
+    cross term of the relative error for both the local BSR operand and a
+    BSR shard's local contribution under the mesh (the per-shard piece the
+    sharded backend psums)."""
+    nrb, bcap, bm, bk = a.tiles.shape
+    n, m = a.shape
+    k = u.shape[1]
+    uf = u.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    u_blk = jnp.pad(uf, ((0, nrb * bm - n), (0, 0))).reshape(nrb, bm, k)
+    ncb = -(-m // bk)
+    v_blk = jnp.pad(vf, ((0, ncb * bk - m), (0, 0))).reshape(ncb, bk, k)
+    v_blk = v_blk[a.block_cols]  # (nrb, bcap, bk, k); padded slots see
+    # block 0, harmless: their tiles are all-zero
+    return jnp.einsum("isrc,ird,iscd->",
+                      a.tiles.astype(jnp.float32), u_blk, v_blk)
+
+
+def bsr_to_coo(a: BSR):
+    """Host-side element COO ``(rows, cols, vals)`` of the stored nonzeros —
+    work and temporaries proportional to the stored-tile volume, never the
+    dense (n, m) matrix.  This is how an already-ingested BSR re-enters a
+    packing front door (e.g. :func:`repro.core.distributed.distribute_bsr`
+    carving it into per-device tile grids)."""
+    tiles = np.asarray(a.tiles)
+    bcols = np.asarray(a.block_cols)
+    nz_i, nz_s, nz_r, nz_c = np.nonzero(tiles)
+    rows = nz_i * a.bm + nz_r
+    cols = bcols[nz_i, nz_s].astype(np.int64) * a.bk + nz_c
+    return rows.astype(np.int64), cols, tiles[nz_i, nz_s, nz_r, nz_c]
 
 
 def bsr_to_dense(a: BSR) -> jax.Array:

@@ -78,11 +78,10 @@ def nmf_dryrun_cell(mesh: jax.sharding.Mesh, *,
         sparsify_v=DistTopK(t_v, ("model",)),
         track_error=False,
     )
-    a_spec, u_spec, v_spec = run.specs
+    _, u_spec, v_spec = run.specs
     specs = nmf_input_specs(n, m, k, cap, cap_t, r, c)
     shardings = tuple(
-        NamedSharding(mesh, s)
-        for s in (a_spec, a_spec, a_spec, a_spec, u_spec)
+        NamedSharding(mesh, s) for s in (*run.leaf_specs, u_spec)
     )
     rep = NamedSharding(mesh, P())
     out_shardings = NMFResult(
@@ -95,6 +94,9 @@ def nmf_dryrun_cell(mesh: jax.sharding.Mesh, *,
             run.shard_fn(iters),
             in_shardings=shardings,
             out_shardings=out_shardings,
+            # u0 rotates in place like the production engine's jit — the
+            # memory analysis below then reports the aliased bytes
+            donate_argnums=(4,),
         )
         lowered = jitted.lower(*specs)
         compiled = lowered.compile()
@@ -138,7 +140,10 @@ def main(argv=None):
                     help="early-stop tolerance on the relative residual")
     ap.add_argument("--backend", default=None,
                     help="matmul backend for the ALS hot path "
-                         "(jnp-dense / jnp-csr / pallas-bsr; default: auto)")
+                         "(jnp-dense / jnp-csr / pallas-bsr; default: auto). "
+                         "Composes with --mesh: --backend pallas-bsr "
+                         "--mesh RxC runs the Pallas MXU kernels inside "
+                         "every mesh shard (per-device BSR tile grids)")
     ap.add_argument("--stream", action="store_true",
                     help="stream the corpus through the online engine in "
                          "document chunks (implies --solver streaming)")
@@ -146,7 +151,9 @@ def main(argv=None):
                     help="documents per streaming chunk (default: 8 chunks)")
     ap.add_argument("--mesh", default=None, metavar="RxC",
                     help="device grid for the distributed/streaming solvers, "
-                         "e.g. 2x2 (default 1x1)")
+                         "e.g. 2x2 (default 1x1); the inner per-shard "
+                         "backend comes from --backend (jnp-csr / "
+                         "pallas-bsr)")
     ap.add_argument("--small", action="store_true", help="1/8 scale")
     args = ap.parse_args(argv)
 

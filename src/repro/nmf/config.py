@@ -161,12 +161,13 @@ class NMFConfig:
       ``"jnp-csr"``, or ``"pallas-bsr"`` (see :mod:`repro.backend`).
       ``None`` auto-selects from the input type and device: scipy-sparse
       corpora take the Pallas BSR kernel path on TPU and the jnp-csr
-      reference elsewhere.  Only the ALS family (``"als"``/``"enforced"``)
-      supports ``"pallas-bsr"``.  For the ``"distributed"`` solver this
-      names the *local per-shard* backend that
-      :class:`repro.backend.sharded.ShardedBackend` wraps with the mesh
-      collectives (currently ``"jnp-csr"``; BSR shard ingest is an open
-      roadmap item).
+      reference elsewhere.  For the ``"distributed"`` solver (and
+      ``"streaming"`` on a non-1x1 mesh) this names the *local per-shard*
+      backend that :class:`repro.backend.sharded.ShardedBackend` wraps
+      with the mesh collectives: ``"jnp-csr"`` shards padded CSR blocks,
+      ``"pallas-bsr"`` shards per-device BSR tile grids so every device
+      feeds the MXU streaming-tile kernels.  The ``"sequential"`` solver
+      does not support ``"pallas-bsr"``.
     * ``tol`` — early-stop tolerance on the relative residual
       ``||U_i - U_{i-1}||_F / ||U_i||_F``; 0 disables early stopping.
     * ``seed`` — PRNG seed for the default initial guess.
@@ -213,22 +214,24 @@ class NMFConfig:
                 raise ValueError(
                     f"unknown backend {self.backend!r}; "
                     f"available: {available_backends()}")
-            if (self.backend == "pallas-bsr"
-                    and self.solver in ("sequential", "distributed")):
+            if self.backend == "pallas-bsr" and self.solver == "sequential":
                 raise ValueError(
-                    f"backend 'pallas-bsr' is only supported by the ALS "
-                    f"family solvers (als/enforced), not {self.solver!r}")
-            if self.solver == "distributed" and self.backend != "jnp-csr":
+                    "backend 'pallas-bsr' is not supported by the "
+                    "sequential solver; use als/enforced/distributed/"
+                    "streaming")
+            shardable = ("jnp-csr", "pallas-bsr")
+            if (self.solver == "distributed"
+                    and self.backend not in shardable):
                 raise ValueError(
-                    f"the distributed solver shards per-device CSR blocks; "
-                    f"supported local backends: ['jnp-csr'], got "
-                    f"{self.backend!r}")
+                    f"the distributed solver shards per-device CSR blocks "
+                    f"or BSR tile grids; supported local backends: "
+                    f"{list(shardable)}, got {self.backend!r}")
             if (self.solver == "streaming" and self.mesh_shape != (1, 1)
-                    and self.backend != "jnp-csr"):
+                    and self.backend not in shardable):
                 raise ValueError(
-                    f"streaming on a mesh shards per-device CSR chunks; "
-                    f"supported local backends: ['jnp-csr'], got "
-                    f"{self.backend!r}")
+                    f"streaming on a mesh shards per-device CSR chunks or "
+                    f"BSR tile grids; supported local backends: "
+                    f"{list(shardable)}, got {self.backend!r}")
         if (len(self.mesh_shape) != 2
                 or any(int(s) <= 0 for s in self.mesh_shape)):
             raise ValueError(

@@ -90,7 +90,8 @@ class EnforcedNMF:
 
     # -- input coercion ------------------------------------------------------
 
-    def _coerce(self, a: ArrayLike, chunkable: bool = False) -> Matrix:
+    def _coerce(self, a: ArrayLike, chunkable: bool = False,
+                for_mesh: bool = False) -> Matrix:
         """Accept jax/numpy dense, SpCSR, BSROperand, or scipy sparse and
         ingest it for ``config.backend``.
 
@@ -104,9 +105,18 @@ class EnforcedNMF:
         ``chunkable=True`` (the streaming ``fit``) keeps a pallas-bsr
         target in column-sliceable SpCSR form instead — the corpus must be
         carved into document chunks host-side, and each chunk re-ingests
-        for the configured backend inside ``partial_fit``."""
+        for the configured backend inside ``partial_fit``.  ``for_mesh``
+        (the distributed solver and mesh-streaming chunks) likewise skips
+        the single-operand BSR conversion: the sharded ingest re-packs the
+        corpus into *per-device* tile grids / CSR blocks
+        (``engine.distribute``), so a whole-corpus ``BSROperand`` here
+        would be packed twice."""
         name = self.config.backend
-        if chunkable and name == "pallas-bsr":
+        if for_mesh and isinstance(a, BSROperand):
+            # every shard format re-packs the stored tiles per device
+            # (pallas-bsr tile-wise, jnp-csr through the COO front door)
+            return a
+        if (chunkable or for_mesh) and name == "pallas-bsr":
             name = "jnp-csr"
         if name is None:
             if isinstance(a, (SpCSR, BSROperand, jax.Array)):
@@ -114,13 +124,15 @@ class EnforcedNMF:
             if hasattr(a, "tocoo"):  # scipy sparse, without a hard import
                 name = default_backend_name(a)
                 if (name == "pallas-bsr"
-                        and self.config.solver in ("sequential",
-                                                   "distributed",
-                                                   "streaming")):
-                    # sequential/distributed dispatch on dense/SpCSR only;
-                    # the streaming fit carves column chunks host-side,
-                    # which BSR operands cannot do (explicit
-                    # backend="pallas-bsr" still serves partial_fit chunks)
+                        and (for_mesh
+                             or self.config.solver in ("sequential",
+                                                       "distributed",
+                                                       "streaming"))):
+                    # sequential dispatches on dense/SpCSR only; the
+                    # streaming fit carves column chunks host-side and the
+                    # mesh paths re-pack per device — keep the sliceable
+                    # COO-able form (the mesh engines still run the Pallas
+                    # kernels per shard when backend="pallas-bsr")
                     name = "jnp-csr"
             else:
                 return jnp.asarray(a, dtype=self.config.jnp_dtype)
@@ -147,7 +159,8 @@ class EnforcedNMF:
         seeded default initial guess (shape (n, k); the sequential solver
         also accepts the (n, block_size) block shape)."""
         cfg = self.config
-        a = self._coerce(a, chunkable=cfg.solver == "streaming")
+        a = self._coerce(a, chunkable=cfg.solver == "streaming",
+                         for_mesh=cfg.solver == "distributed")
         n, m = a.shape
         entry = get_solver(cfg.solver)
         if u0 is None:
@@ -163,8 +176,12 @@ class EnforcedNMF:
         # one extra backend spmm (~1/(2*iters) of the fit) beats pinning
         # the corpus
         seed_backend = cfg.backend
-        if cfg.solver == "streaming" and seed_backend == "pallas-bsr":
-            seed_backend = None  # corpus stayed SpCSR for column chunking
+        if (seed_backend is not None
+                and not get_backend(seed_backend).accepts(a)):
+            # the corpus stayed in a sliceable / shardable form (streaming
+            # fit keeps SpCSR for column chunks; the mesh paths re-pack per
+            # device) — seed through the operand's own backend instead
+            seed_backend = None
         stats = seed_online_stats(a, self.v_, backend=seed_backend)
         self._av_acc, self._gv_acc = stats.av, stats.gv
         return self
@@ -238,7 +255,7 @@ class EnforcedNMF:
         if not 0.0 < forget <= 1.0:
             raise ValueError(f"forget must be in (0, 1], got {forget}")
         cfg = self.config
-        a_chunk = self._coerce(a_chunk)
+        a_chunk = self._coerce(a_chunk, for_mesh=self._mesh_streaming())
         self._check_features(a_chunk)
         n, mc = a_chunk.shape
         if self.u_ is None:
@@ -273,7 +290,10 @@ class EnforcedNMF:
         chunk columns sharded on ``"model"``, ``u`` / ``stats.av``
         row-sharded on ``"data"``, ``stats.gv`` replicated; sparsity
         enforcement via the histogram :class:`~repro.core.topk.DistTopK`
-        (the mesh counterpart of the local bisection threshold).
+        (the mesh counterpart of the local bisection threshold).  The chunk
+        re-ingests into the inner backend's per-device shard format —
+        padded CSR for ``jnp-csr``, BSR tile grids for ``pallas-bsr`` (the
+        MXU streaming-tile kernels inside every shard).
 
         Chunk widths need no mesh alignment: the column count is padded up
         to a multiple of the cols axis with empty documents — an all-zero
@@ -285,27 +305,23 @@ class EnforcedNMF:
 
         from repro.backend.sharded import make_sharded_online
         from repro.compat import set_mesh
-        from repro.core.distributed import distribute_operand
         from repro.core.topk import DistTopK
         from repro.launch.mesh import make_nmf_mesh
-        from repro.nmf.solvers import dist_budget
+        from repro.nmf.solvers import dist_budget, mesh_inner_backend
 
         cfg = self.config
         n, mc = a_chunk.shape
         r, c = cfg.mesh_shape
-        if isinstance(a_chunk, BSROperand):
-            raise TypeError(
-                "streaming on a mesh shards per-device CSR chunks; pass "
-                "the chunk as dense / SpCSR / scipy sparse")
         if n % r:
             raise ValueError(
                 f"term count {n} must be divisible by the mesh rows "
                 f"axis {r} (mesh_shape {(r, c)})")
         mc_pad = -(-mc // c) * c
         if mc_pad != mc:  # pad with empty documents (zero statistics)
-            if isinstance(a_chunk, SpCSR):
+            if isinstance(a_chunk, (SpCSR, BSROperand)):
                 # widen the logical shape only; no stored entries change
-                a_chunk = SpCSR(a_chunk.values, a_chunk.cols, (n, mc_pad))
+                # (the shard ingest reads elements + the logical shape)
+                a_chunk = dataclasses.replace(a_chunk, shape=(n, mc_pad))
             else:
                 a_chunk = jnp.pad(jnp.asarray(a_chunk),
                                   ((0, 0), (0, mc_pad - mc)))
@@ -318,11 +334,17 @@ class EnforcedNMF:
             mesh, rows_axes, cols_axis,
             sparsify_u=None if t_u is None else DistTopK(t_u, rows_axes),
             sparsify_v=None if t_v is None else DistTopK(t_v, (cols_axis,)),
-            inner=cfg.backend or "jnp-csr",
+            inner=mesh_inner_backend(cfg, a_chunk),
         )
-        a_spec, u_spec, _ = engine.specs
-        dist = distribute_operand(a_chunk, r, c, mesh, a_spec)
+        _, u_spec, _ = engine.specs
+        dist = engine.distribute(a_chunk)
         u = jax.device_put(self.u_, NamedSharding(mesh, u_spec))
+        # the jitted step donates av/gv (in-place accumulator rotation —
+        # the committed statistics below replace them on success).  These
+        # are estimator-internal buffers with no caller-visible aliases, so
+        # no defensive copy; if the step itself fails the model's stream
+        # statistics are gone with it and the next partial_fit must follow
+        # a fresh fit.
         stats = OnlineStats(
             av=jax.device_put(stats.av, NamedSharding(mesh, u_spec)),
             gv=jax.device_put(stats.gv, NamedSharding(mesh, P())),

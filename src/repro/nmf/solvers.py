@@ -28,7 +28,7 @@ from repro.sparse.csr import SpCSR, column_block
 
 __all__ = ["solve_als", "solve_enforced", "solve_sequential",
            "solve_distributed", "solve_streaming", "dist_budget",
-           "default_chunk_docs"]
+           "default_chunk_docs", "mesh_inner_backend"]
 
 #: iteration chunk used when an early-stop tolerance is active — small enough
 #: to stop promptly, large enough that at most two distinct scan lengths are
@@ -55,8 +55,8 @@ def dist_budget(sparsity, rows: int, k: int, which: str):
 
 
 def _reject_bsr_operand(a: Matrix, solver_name: str) -> None:
-    """The legacy sequential/distributed engines dispatch on dense/SpCSR
-    only; a BSR operand reaching them would fail deep inside with cryptic
+    """The legacy sequential engine dispatches on dense/SpCSR only; a BSR
+    operand reaching it would fail deep inside with cryptic
     shape/attribute errors (the config-level check only sees explicitly
     named backends, not an operand passed in directly)."""
     if isinstance(a, BSROperand):
@@ -64,6 +64,16 @@ def _reject_bsr_operand(a: Matrix, solver_name: str) -> None:
             f"the {solver_name!r} solver does not support BSR operands "
             "(backend 'pallas-bsr'); use the als/enforced solvers, or "
             "pass the matrix as dense / SpCSR / scipy sparse")
+
+
+def mesh_inner_backend(config: NMFConfig, a: Matrix) -> str:
+    """The *local per-shard* backend the mesh engines wrap: an explicit
+    ``config.backend`` wins; a ``BSROperand`` operand auto-selects the
+    Pallas tile path (its tiles re-pack per device without densifying);
+    everything else defaults to the padded-CSR reference shards."""
+    if config.backend is not None:
+        return config.backend
+    return "pallas-bsr" if isinstance(a, BSROperand) else "jnp-csr"
 
 
 def _run_chunked(run, config: NMFConfig, u0: jax.Array,
@@ -255,19 +265,20 @@ def solve_distributed(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
     input goes through the thin dense->COO adapter.
 
     ``config.backend`` names the *local* per-shard backend wrapped by
-    ``ShardedBackend`` (``None`` selects ``jnp-csr``; sparsity enforcement
-    always uses the histogram threshold — one fused vector psum — so
-    ``sparsity.mode`` bisection/exact variants map onto it here).
+    ``ShardedBackend``: ``"jnp-csr"`` shards padded CSR, ``"pallas-bsr"``
+    shards per-device BSR tile grids (``distribute_bsr``) so every device
+    feeds the MXU streaming-tile kernels; ``None`` selects by operand
+    (``BSROperand`` -> ``pallas-bsr``, else ``jnp-csr``).  Sparsity
+    enforcement always uses the histogram threshold — one fused vector
+    psum — so ``sparsity.mode`` bisection/exact variants map onto it here.
     """
     from jax.sharding import NamedSharding
 
     from repro.backend.sharded import make_sharded_als
     from repro.compat import set_mesh
-    from repro.core.distributed import distribute_operand
     from repro.core.topk import DistTopK
     from repro.launch.mesh import make_nmf_mesh
 
-    _reject_bsr_operand(a, "distributed")
     r, c = config.mesh_shape
     n, m = a.shape
     if n % r or m % c:
@@ -283,11 +294,15 @@ def solve_distributed(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
         sparsify_u=None if t_u is None else DistTopK(t_u, rows_axes),
         sparsify_v=None if t_v is None else DistTopK(t_v, (cols_axis,)),
         track_error=config.track_error,
-        inner=config.backend or "jnp-csr",
+        inner=mesh_inner_backend(config, a),
     )
-    a_spec, u_spec, _ = engine.specs
-    dist = distribute_operand(a, r, c, mesh, a_spec)
-    u0 = jax.device_put(u0, NamedSharding(mesh, u_spec))
+    _, u_spec, _ = engine.specs
+    dist = engine.distribute(a)
+    # the jitted step donates its u argument (in-place factor rotation);
+    # device_put may alias the caller's buffer, so hand it a real copy —
+    # one (n, k) allocation per fit, not per iteration
+    u0 = jax.device_put(jnp.array(u0, copy=True),
+                        NamedSharding(mesh, u_spec))
 
     def run(u_init, iters):
         with set_mesh(mesh):

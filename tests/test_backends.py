@@ -77,9 +77,16 @@ def test_default_backend_for_scipy_off_tpu():
 def test_config_validates_backend():
     with pytest.raises(ValueError, match="unknown backend"):
         NMFConfig(backend="bogus")
-    with pytest.raises(ValueError, match="only supported by the ALS"):
-        NMFConfig(backend="pallas-bsr", solver="distributed")
+    with pytest.raises(ValueError, match="sequential"):
+        NMFConfig(backend="pallas-bsr", solver="sequential")
+    with pytest.raises(ValueError, match="jnp-csr"):
+        NMFConfig(backend="jnp-dense", solver="distributed")
+    with pytest.raises(ValueError, match="jnp-csr"):
+        NMFConfig(backend="jnp-dense", solver="streaming", mesh_shape=(2, 2))
     NMFConfig(backend="pallas-bsr", solver="enforced")  # fine
+    # BSR shard ingest: the Pallas kernels run inside every mesh shard
+    NMFConfig(backend="pallas-bsr", solver="distributed")
+    NMFConfig(backend="pallas-bsr", solver="streaming", mesh_shape=(2, 2))
 
 
 # ---------------------------------------------------------------------------
@@ -207,13 +214,15 @@ def test_bsr_transpose_bcap_keeps_largest_tiles():
     np.testing.assert_allclose(np.asarray(bsr_to_dense(at)), expect)
 
 
-def test_sequential_and_distributed_reject_bsr_operand(corpus):
+def test_sequential_rejects_bsr_operand(corpus):
+    """The sequential engine still dispatches on dense/SpCSR only; the
+    distributed solver now *accepts* BSR operands (tile-sharded per device
+    — see tests/test_bsr_sharded.py)."""
     op = get_backend("pallas-bsr").prepare(corpus)
-    for solver in ("sequential", "distributed"):
-        model = EnforcedNMF(NMFConfig(k=5, iters=3, solver=solver,
-                                      sparsity=Sparsity(t_u=55)))
-        with pytest.raises(TypeError, match="does not support BSR"):
-            model.fit(op)
+    model = EnforcedNMF(NMFConfig(k=5, iters=3, solver="sequential",
+                                  sparsity=Sparsity(t_u=55)))
+    with pytest.raises(TypeError, match="does not support BSR"):
+        model.fit(op)
 
 
 def test_bsr_relative_error_matches_dense(corpus):

@@ -1,0 +1,366 @@
+"""Tile-sharded BSR: the Pallas MXU kernels inside every mesh shard.
+
+``distribute_bsr`` carves any operand into per-device (R, C) grids of BSR
+tile blocks (both orientations, static per-shard ``bcap``), and the
+sharded execution layer carries them through the same ``ShardView`` /
+``ShardedBackend`` machinery as the padded-CSR shards — so
+``sharded[pallas-bsr]`` must track ``sharded[jnp-csr]`` trajectory-for-
+trajectory on real (forced) device grids, for both the batch and the
+streaming engines, with no dense (n, m) materialization anywhere in the
+ingest path.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed import DistBSR, distribute_bsr
+from repro.data import synthetic_journal_corpus
+from repro.kernels.bsr import BSR, bsr_operand, bsr_to_dense
+from repro.nmf import EnforcedNMF, NMFConfig, Sparsity
+from repro.sparse import to_dense
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(n, code):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    a_sp, _ = synthetic_journal_corpus(n_terms=96, n_docs=64, n_journals=4,
+                                       seed=9)
+    return a_sp, np.asarray(to_dense(a_sp))
+
+
+# ---------------------------------------------------------------------------
+# distribute_bsr: tile-wise shard-grid ingest
+# ---------------------------------------------------------------------------
+
+def test_distribute_bsr_roundtrip(corpus):
+    """Both orientations of every shard decode back to the exact global
+    matrix — forward shards tile A's (i, j) blocks, transposed shards tile
+    A^T's, from scipy, SpCSR, dense, and BSROperand front doors alike."""
+    scipy_sparse = pytest.importorskip("scipy.sparse")
+    a_sp, a = corpus
+    r, c = 2, 2
+    n, m = a.shape
+    dist = distribute_bsr(a_sp, r, c, bm=16, bk=16)
+    # forward orientation: shard (i, j) holds A[i-block, j-block]
+    fwd = np.zeros_like(a)
+    n_loc, m_loc = n // r, m // c
+    for i in range(r):
+        for j in range(c):
+            local = BSR(dist.tiles[i, j], dist.block_cols[i, j],
+                        (n_loc, m_loc))
+            fwd[i * n_loc:(i + 1) * n_loc, j * m_loc:(j + 1) * m_loc] = \
+                np.asarray(bsr_to_dense(local))
+    np.testing.assert_allclose(fwd, a, rtol=1e-6)
+    # transposed orientation: shard (i, j) holds A[i-block, j-block]^T
+    tsp = np.zeros_like(a)
+    for i in range(r):
+        for j in range(c):
+            local = BSR(dist.tiles_t[i, j], dist.block_cols_t[i, j],
+                        (m_loc, n_loc))
+            tsp[i * n_loc:(i + 1) * n_loc, j * m_loc:(j + 1) * m_loc] = \
+                np.asarray(bsr_to_dense(local)).T
+    np.testing.assert_allclose(tsp, a, rtol=1e-6)
+    # every ingest front door lands on identical shard grids
+    for other in (a, scipy_sparse.csr_matrix(a),
+                  bsr_operand(a, bm=16, bk=16)):
+        d2 = distribute_bsr(other, r, c, bm=16, bk=16)
+        np.testing.assert_allclose(np.asarray(d2.tiles),
+                                   np.asarray(dist.tiles), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(d2.block_cols),
+                                      np.asarray(dist.block_cols))
+        np.testing.assert_allclose(np.asarray(d2.tiles_t),
+                                   np.asarray(dist.tiles_t), rtol=1e-6)
+
+
+def test_distribute_bsr_truncation_warns():
+    """An explicit ``bcap`` below a row-block's occupancy keeps the bcap
+    largest-Frobenius-norm tiles per row-block and warns with the count."""
+    a = np.zeros((8, 32), np.float32)
+    # row-block 0 of the single shard: four occupied 8x8 tiles with
+    # distinct norms (tile j has all-entries j+1)
+    for j in range(4):
+        a[:, j * 8:(j + 1) * 8] = j + 1.0
+    with pytest.warns(UserWarning, match="largest-Frobenius-norm"):
+        dist = distribute_bsr(a, 1, 1, bm=8, bk=8, bcap=2)
+    assert dist.tiles.shape == (1, 1, 1, 2, 8, 8)
+    # survivors are the two largest tiles (block-cols 2 and 3), in
+    # ascending block-col order
+    np.testing.assert_array_equal(np.asarray(dist.block_cols)[0, 0, 0],
+                                  [2, 3])
+    np.testing.assert_allclose(np.asarray(dist.tiles)[0, 0, 0, 0], 3.0)
+    np.testing.assert_allclose(np.asarray(dist.tiles)[0, 0, 0, 1], 4.0)
+    # the untruncated transposed orientation kept everything
+    assert dist.tiles_t.shape == (1, 1, 4, 1, 8, 8)
+
+
+def test_distribute_bsr_rejects_unaligned():
+    a = np.ones((9, 8), np.float32)
+    with pytest.raises(ValueError, match="divisible"):
+        distribute_bsr(a, 2, 2, bm=4, bk=4)
+
+
+def test_bsr_shard_ingest_never_densifies(corpus, monkeypatch):
+    """No dense (n, m) temporary anywhere in the BSR shard-ingest path: a
+    distributed fit with backend="pallas-bsr" on SpCSR input runs with
+    every densifier booby-trapped."""
+    import repro.core.distributed as dist_mod
+    import repro.kernels.bsr as bsr_mod
+    import repro.sparse.csr as csr_mod
+
+    a_sp, _ = corpus
+
+    def boom(*args, **kw):
+        raise AssertionError("BSR shard ingest densified the matrix")
+
+    monkeypatch.setattr(csr_mod, "to_dense", boom)
+    monkeypatch.setattr(bsr_mod, "bsr_to_dense", boom)
+    monkeypatch.setattr(dist_mod, "distribute_csr", boom)
+    model = EnforcedNMF(NMFConfig(k=4, iters=4, solver="distributed",
+                                  backend="pallas-bsr",
+                                  sparsity=Sparsity(t_u=40))).fit(a_sp)
+    assert model.u_.shape == (96, 4)
+    assert np.isfinite(model.result_.final_error)
+
+
+def test_distributed_auto_selects_bsr_inner_for_bsr_operand(corpus):
+    """A BSROperand handed to the distributed solver auto-selects the
+    pallas-bsr inner backend (its tiles re-pack per device) and matches
+    the jnp-csr inner trajectory."""
+    from repro.nmf.solvers import mesh_inner_backend
+
+    a_sp, a = corpus
+    op = bsr_operand(a)
+    cfg = NMFConfig(k=4, iters=6, solver="distributed",
+                    sparsity=Sparsity(t_u=40, t_v=160))
+    assert mesh_inner_backend(cfg, op) == "pallas-bsr"
+    assert mesh_inner_backend(cfg, a_sp) == "jnp-csr"
+    m_bsr = EnforcedNMF(cfg).fit(op)
+    m_csr = EnforcedNMF(cfg).fit(a_sp)
+    np.testing.assert_allclose(np.asarray(m_bsr.result_.residual),
+                               np.asarray(m_csr.result_.residual),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Trajectory parity on forced multi-device grids (batch + streaming)
+# ---------------------------------------------------------------------------
+
+_PARITY_CODE = """
+    import jax, jax.numpy as jnp, numpy as np, json
+    from repro.core import init_u0
+    from repro.data import synthetic_journal_corpus
+    from repro.nmf import EnforcedNMF, NMFConfig, Sparsity
+    from repro.sparse import to_dense
+    a_sp, _ = synthetic_journal_corpus(n_terms=256, n_docs=128, n_journals=5, seed=7)
+    a = jnp.asarray(to_dense(a_sp))
+    u0 = init_u0(jax.random.PRNGKey(3), 256, 5)
+    sparsity = Sparsity(t_u=55, t_v=300)
+    rec = {"batch": {}, "stream": {}}
+    for shape in [(2, 2), (4, 1)]:
+        runs = {}
+        for inner in ["jnp-csr", "pallas-bsr"]:
+            m = EnforcedNMF(NMFConfig(k=5, iters=10, solver="distributed",
+                                      mesh_shape=shape, backend=inner,
+                                      sparsity=sparsity)).fit(a_sp, u0=u0)
+            runs[inner] = {
+                "res": np.asarray(m.result_.residual).tolist(),
+                "err": np.asarray(m.result_.error).tolist(),
+                "nnz_u": int(jnp.sum(m.u_ != 0)),
+                "u": np.asarray(m.u_).tolist(),
+            }
+        rec["batch"]["%dx%d" % shape] = runs
+    def stream(inner, shape):
+        m = EnforcedNMF(NMFConfig(k=5, iters=10, solver="streaming",
+                                  mesh_shape=shape, backend=inner,
+                                  sparsity=Sparsity(t_u=55, t_v=120)))
+        for lo, hi in [(0, 48), (48, 96), (96, 128)]:
+            m.partial_fit(a[:, lo:hi])
+        return m
+    for shape in [(2, 2), (4, 1)]:
+        runs = {}
+        for inner in ["jnp-csr", "pallas-bsr"]:
+            m = stream(inner, shape)
+            runs[inner] = {"u": np.asarray(m.u_).tolist(),
+                           "nnz_u": int(jnp.sum(m.u_ != 0))}
+        rec["stream"]["%dx%d" % shape] = runs
+    # ragged chunk widths re-ingest into padded per-device tile grids too
+    m_r = EnforcedNMF(NMFConfig(k=5, iters=10, solver="streaming",
+                                mesh_shape=(2, 2), backend="pallas-bsr"))
+    for lo, hi in [(0, 31), (31, 64)]:
+        m_r.partial_fit(a[:, lo:hi])
+    m_c = EnforcedNMF(NMFConfig(k=5, iters=10, solver="streaming",
+                                mesh_shape=(2, 2), backend="jnp-csr"))
+    for lo, hi in [(0, 31), (31, 64)]:
+        m_c.partial_fit(a[:, lo:hi])
+    rec["ragged"] = {
+        "bsr_u": np.asarray(m_r.u_).tolist(),
+        "csr_u": np.asarray(m_c.u_).tolist(),
+        "v_shape": list(m_r.v_.shape),
+    }
+    # a BSROperand chunk shards on EITHER inner (CSR ingests it through
+    # the COO front door, BSR tile-wise) and matches the dense chunks
+    from repro.kernels.bsr import bsr_operand
+    for inner in ["jnp-csr", "pallas-bsr"]:
+        m_o = EnforcedNMF(NMFConfig(k=5, iters=10, solver="streaming",
+                                    mesh_shape=(2, 2), backend=inner,
+                                    sparsity=Sparsity(t_u=55, t_v=120)))
+        for lo, hi in [(0, 48), (48, 96), (96, 128)]:
+            m_o.partial_fit(bsr_operand(np.asarray(a[:, lo:hi])))
+        rec["bsr_chunk_" + inner] = np.asarray(m_o.u_).tolist()
+    print(json.dumps(rec))
+"""
+
+
+def test_sharded_bsr_matches_sharded_csr_on_device_grids():
+    """Acceptance: ``sharded[pallas-bsr]`` tracks ``sharded[jnp-csr]``
+    within 1e-4 per iteration on forced 2x2 and 4x1 grids, for both the
+    batch and the streaming engines (same DistTopK thresholds, same psum
+    reductions — only the local tile products differ)."""
+    out = json.loads(run_with_devices(4, textwrap.dedent(_PARITY_CODE))
+                     .strip().splitlines()[-1])
+    for grid, runs in out["batch"].items():
+        csr, bsr = runs["jnp-csr"], runs["pallas-bsr"]
+        np.testing.assert_allclose(bsr["res"], csr["res"], atol=1e-4,
+                                   err_msg=f"batch {grid} residual")
+        np.testing.assert_allclose(bsr["err"], csr["err"], atol=1e-4,
+                                   err_msg=f"batch {grid} error")
+        assert bsr["nnz_u"] <= 55 + 6, grid
+        u_c, u_b = np.asarray(csr["u"]), np.asarray(bsr["u"])
+        rel = np.linalg.norm(u_b - u_c) / max(np.linalg.norm(u_c), 1e-30)
+        assert rel < 1e-4, (grid, rel)
+    for grid, runs in out["stream"].items():
+        u_c = np.asarray(runs["jnp-csr"]["u"])
+        u_b = np.asarray(runs["pallas-bsr"]["u"])
+        rel = np.linalg.norm(u_b - u_c) / max(np.linalg.norm(u_c), 1e-30)
+        assert rel < 1e-4, (grid, rel)
+        assert runs["pallas-bsr"]["nnz_u"] <= 55 + 6, grid
+    ragged = out["ragged"]
+    u_c = np.asarray(ragged["csr_u"])
+    u_b = np.asarray(ragged["bsr_u"])
+    assert np.linalg.norm(u_b - u_c) / np.linalg.norm(u_c) < 1e-4
+    assert ragged["v_shape"] == [33, 5]  # last chunk width, padding dropped
+    # BSROperand chunks shard on either inner and match the dense chunks
+    u_ref = np.asarray(out["stream"]["2x2"]["jnp-csr"]["u"])
+    for inner in ("jnp-csr", "pallas-bsr"):
+        u_o = np.asarray(out["bsr_chunk_" + inner])
+        rel = np.linalg.norm(u_o - u_ref) / max(np.linalg.norm(u_ref), 1e-30)
+        assert rel < 1e-4, (inner, rel)
+
+
+# ---------------------------------------------------------------------------
+# Engine plumbing: formats, caches, donation
+# ---------------------------------------------------------------------------
+
+def test_make_sharded_als_accepts_bsr_inner():
+    """pallas-bsr is a first-class _SHARDABLE_INNER entry for both
+    lowering shims; unknown inners still raise."""
+    from repro.backend.sharded import (
+        _SHARDABLE_INNER, make_sharded_als, make_sharded_online,
+    )
+    from repro.launch.mesh import make_nmf_mesh
+
+    assert set(_SHARDABLE_INNER) >= {"jnp-csr", "pallas-bsr"}
+    mesh = make_nmf_mesh(1, 1)
+    als = make_sharded_als(mesh, ("data",), "model", inner="pallas-bsr")
+    onl = make_sharded_online(mesh, ("data",), "model", inner="pallas-bsr")
+    assert als.backend.name == "sharded[pallas-bsr]"
+    assert onl.backend.name == "sharded[pallas-bsr]"
+    with pytest.raises(ValueError, match="jnp-dense"):
+        make_sharded_als(mesh, ("data",), "model", inner="jnp-dense")
+
+
+def test_sharded_bsr_keyed_cache_per_shape(corpus):
+    """The BSR shard fn is keyed on the global shape (the local tile grids
+    cannot carry it); equal-config equal-shape fits share one jitted
+    callable, so repeated fits stay zero-recompile."""
+    from repro.backend import sharded
+
+    a_sp, _ = corpus
+    cfg = NMFConfig(k=4, iters=4, solver="distributed",
+                    backend="pallas-bsr", sparsity=Sparsity(t_u=40))
+    m1 = EnforcedNMF(cfg).fit(a_sp)
+    info_first = sharded._sharded_als_jit.cache_info()
+    m2 = EnforcedNMF(cfg).fit(a_sp)
+    info_second = sharded._sharded_als_jit.cache_info()
+    assert info_second.misses == info_first.misses
+    assert info_second.hits > info_first.hits
+    np.testing.assert_array_equal(np.asarray(m1.u_), np.asarray(m2.u_))
+
+
+def test_donated_factor_survives_caller_reuse(corpus):
+    """The jitted mesh steps donate the factor/accumulator buffers; the
+    driver copies before donating, so a caller-held u0 survives repeated
+    fits and the streaming accumulators roll forward chunk to chunk."""
+    from repro.core import init_u0
+
+    a_sp, a = corpus
+    u0 = init_u0(jax.random.PRNGKey(1), 96, 4)
+    cfg = NMFConfig(k=4, iters=4, solver="distributed",
+                    sparsity=Sparsity(t_u=40))
+    m1 = EnforcedNMF(cfg).fit(a_sp, u0=u0)
+    m2 = EnforcedNMF(cfg).fit(a_sp, u0=u0)  # u0 must still be alive
+    np.testing.assert_array_equal(np.asarray(m1.u_), np.asarray(m2.u_))
+    np.testing.assert_array_equal(np.asarray(u0), np.asarray(u0))
+
+    model = EnforcedNMF(NMFConfig(k=4, iters=6, solver="streaming",
+                                  mesh_shape=(1, 1), backend="jnp-csr"))
+    for lo, hi in [(0, 32), (32, 64)]:
+        model.partial_fit(jnp.asarray(a)[:, lo:hi])
+    assert np.isfinite(np.asarray(model._av_acc)).all()
+    assert np.isfinite(np.asarray(model._gv_acc)).all()
+
+
+# ---------------------------------------------------------------------------
+# Vectorized bsr_from_dense (satellite)
+# ---------------------------------------------------------------------------
+
+def test_bsr_from_dense_vectorized_matches_scipy_ingest(corpus):
+    """The vectorized dense ingest lands on exactly the tile layout of the
+    nnz-proportional scipy path (the layout invariant both share)."""
+    scipy_sparse = pytest.importorskip("scipy.sparse")
+    from repro.kernels.bsr import bsr_from_dense, bsr_from_scipy
+
+    _, a = corpus
+    b_dense = bsr_from_dense(a, bm=16, bk=16)
+    b_scipy = bsr_from_scipy(scipy_sparse.csr_matrix(a), bm=16, bk=16)
+    assert b_dense.tiles.shape == b_scipy.tiles.shape
+    np.testing.assert_allclose(np.asarray(b_dense.tiles),
+                               np.asarray(b_scipy.tiles), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(b_dense.block_cols),
+                                  np.asarray(b_scipy.block_cols))
+    np.testing.assert_allclose(np.asarray(bsr_to_dense(b_dense)), a,
+                               rtol=1e-6)
+
+
+def test_bsr_from_dense_truncation_keeps_largest():
+    """bcap overflow keeps the largest-Frobenius-norm blocks (the
+    bsr_from_scipy policy — the old loop silently kept the first bcap) and
+    warns."""
+    from repro.kernels.bsr import bsr_from_dense
+
+    a = np.zeros((4, 16), np.float32)
+    for j in range(4):
+        a[:, j * 4:(j + 1) * 4] = j + 1.0
+    with pytest.warns(UserWarning, match="largest-Frobenius-norm"):
+        b = bsr_from_dense(a, bm=4, bk=4, bcap=2)
+    np.testing.assert_array_equal(np.asarray(b.block_cols)[0], [2, 3])
+    np.testing.assert_allclose(np.asarray(b.tiles)[0, 0], 3.0)
+    np.testing.assert_allclose(np.asarray(b.tiles)[0, 1], 4.0)
