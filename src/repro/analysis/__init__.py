@@ -1,0 +1,46 @@
+"""``repro.analysis`` — static + runtime enforcement of the repo's
+JAX/Pallas hygiene invariants.
+
+Static side (pure stdlib, no jax import — runs anywhere)::
+
+    python -m repro.analysis src tests benchmarks [--format json]
+
+AST rules over the codebase: **no-densify** (sparse operands never silently
+materialize dense), **jit-cache** (no fresh lambdas/partials/closures into
+``jax.jit``/``shard_map`` outside keyed caches), **donation-safety**
+(``donate_argnums`` call sites pass provably-fresh buffers),
+**pallas-purity** (kernel bodies stay device-pure), and **psum-axis**
+(collective axis names are declared mesh axes).  Per-line waivers need a
+reason: ``# repro: allow[<rule>] why``.
+
+Runtime side (imports jax lazily)::
+
+    from repro.analysis import recompile_guard
+    with recompile_guard():          # raises if anything XLA-compiles
+        model.fit(a)                 # inside the block
+
+:func:`recompile_guard` counts real XLA compilations through jax's
+monitoring events, so zero-recompile tests assert the compiler's own
+counter instead of probing cache keys.
+"""
+from repro.analysis.framework import (
+    Finding, Rule, all_rules, analyze_paths, analyze_source, register_rule,
+    render_json, render_text,
+)
+
+__all__ = [
+    "Finding", "Rule", "all_rules", "analyze_paths", "analyze_source",
+    "register_rule", "render_json", "render_text",
+    "recompile_guard", "CompilationCounter", "RecompilationError",
+]
+
+
+def __getattr__(name):
+    # the runtime contract layer imports jax; keep it lazy so the static
+    # CLI works in environments without jax installed
+    if name in ("recompile_guard", "CompilationCounter",
+                "RecompilationError"):
+        from repro.analysis import runtime
+
+        return getattr(runtime, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

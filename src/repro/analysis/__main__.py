@@ -1,0 +1,69 @@
+"""CLI: ``python -m repro.analysis <paths...>`` — the CI hygiene gate.
+
+Exit codes: 0 = clean (suppressed-with-reason findings allowed), 1 = any
+unsuppressed finding or reasonless suppression, 2 = unreadable/unparseable
+input.  ``--format json`` emits the machine-readable report the CI job
+uploads as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.framework import (
+    all_rules, analyze_paths, render_json, render_text,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX/Pallas hygiene analyzer (no-densify, jit-cache, "
+                    "donation-safety, pallas-purity, psum-axis)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--out", default=None,
+                    help="write the report here instead of stdout")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="include suppressed findings in the text report")
+    args = ap.parse_args(argv)
+
+    registry = all_rules()
+    if args.list_rules:
+        for name, rule in sorted(registry.items()):
+            print(f"{name}: {rule.description}")
+        return 0
+
+    rules = None
+    if args.rules:
+        names = [n.strip() for n in args.rules.split(",") if n.strip()]
+        unknown = [n for n in names if n not in registry]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)}; "
+                  f"known: {', '.join(sorted(registry))}", file=sys.stderr)
+            return 2
+        rules = [registry[n] for n in names]
+
+    findings, errors = analyze_paths(args.paths, rules=rules)
+    if args.format == "json":
+        report = render_json(findings, errors)
+    else:
+        report = render_text(findings, errors,
+                             verbose_suppressed=args.show_suppressed)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(report + "\n")
+    else:
+        print(report)
+    if errors:
+        return 2
+    return 1 if any(not f.suppressed for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

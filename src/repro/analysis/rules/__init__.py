@@ -1,0 +1,9 @@
+"""Built-in rules.  Importing this package registers every rule module;
+:func:`repro.analysis.framework.all_rules` does so lazily."""
+from repro.analysis.rules import (  # noqa: F401
+    donation,
+    jit_cache,
+    no_densify,
+    pallas_purity,
+    psum_axis,
+)

@@ -1,0 +1,135 @@
+"""Shared AST helpers for the rule modules."""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Sequence, Set
+
+from repro.analysis.framework import FileContext, qualname
+
+#: aliases under which the numpy-family modules are imported in this repo
+NUMPY_MODULES = {"np", "numpy", "jnp", "jax.numpy"}
+
+#: the repo's sparse operand types — a parameter annotated with one of
+#: these (or a value built by one of the SPARSE_CONSTRUCTORS) is a sparse
+#: operand for the no-densify rule
+SPARSE_TYPES = {
+    "SpCSR", "BSR", "BSROperand", "DistCSR", "DistBSR", "Matrix",
+    "ShardView",
+}
+
+#: call targets whose result is a sparse operand (trailing name of the
+#: dotted call target)
+SPARSE_CONSTRUCTORS = {
+    "SpCSR", "BSR", "BSROperand", "DistCSR", "DistBSR",
+    "from_coo", "from_scipy", "from_dense", "column_block",
+    "bsr_from_dense", "bsr_from_scipy", "bsr_operand", "bsr_transpose",
+    "distribute_csr", "distribute_csr_from_padded", "distribute_bsr",
+}
+
+
+def call_target(node: ast.Call) -> Optional[str]:
+    """Dotted name of the called expression, or None."""
+    return qualname(node.func)
+
+
+def tail_name(dotted: Optional[str]) -> Optional[str]:
+    if dotted is None:
+        return None
+    return dotted.rsplit(".", 1)[-1]
+
+
+def annotation_name(node: Optional[ast.AST]) -> Optional[str]:
+    """Trailing identifier of an annotation (``SpCSR``, ``csr.SpCSR``,
+    ``Optional[SpCSR]`` -> ``SpCSR``)."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Subscript):
+        # Optional[SpCSR] / Union[...] — look at the inner names too
+        for inner in ast.walk(node):
+            if isinstance(inner, (ast.Name, ast.Attribute)):
+                name = tail_name(qualname(inner))
+                if name in SPARSE_TYPES:
+                    return name
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value.rsplit(".", 1)[-1].strip("'\"[]")
+    return tail_name(qualname(node))
+
+
+def function_scopes(ctx: FileContext) -> Iterator[ast.AST]:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def sparse_names_in(fn: ast.AST) -> Set[str]:
+    """Names that are sparse operands inside a function scope: parameters
+    annotated with a sparse type, and names assigned from a sparse
+    constructor call."""
+    suspects: Set[str] = set()
+    args = fn.args
+    for a in (*args.posonlyargs, *args.args, *args.kwonlyargs):
+        if annotation_name(a.annotation) in SPARSE_TYPES:
+            suspects.add(a.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if tail_name(call_target(node.value)) in SPARSE_CONSTRUCTORS:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        suspects.add(t.id)
+    return suspects
+
+
+def is_module_scope(ctx: FileContext, node: ast.AST) -> bool:
+    return ctx.enclosing_function(node) is None
+
+
+def decorator_names(fn: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    for dec in getattr(fn, "decorator_list", []):
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = tail_name(qualname(target))
+        if name:
+            names.add(name)
+    return names
+
+
+def in_cached_factory(ctx: FileContext, node: ast.AST) -> bool:
+    """True when ``node`` sits inside a function decorated with
+    ``lru_cache``/``cache`` — the keyed-cache factory pattern, where a
+    fresh closure per call is exactly the point (the cache keys it)."""
+    for parent in ctx.parents(node):
+        if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if decorator_names(parent) & {"lru_cache", "cache"}:
+                return True
+    return False
+
+
+def string_constants(node: ast.AST) -> Iterator[str]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Constant) and isinstance(n.value, str):
+            yield n.value
+
+
+def local_function_names(fn: ast.AST) -> Set[str]:
+    """Names of functions defined directly inside ``fn`` (closures)."""
+    names: Set[str] = set()
+    for node in ast.walk(fn):
+        if node is fn:
+            continue
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(node.name)
+    return names
+
+
+def assigned_from_call(fn: ast.AST, names: Sequence[str]) -> Set[str]:
+    """Subset of ``names`` that are assigned from a Call expression
+    somewhere in ``fn`` (factory-built fresh callables)."""
+    wanted = set(names)
+    hits: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id in wanted:
+                    hits.add(t.id)
+    return hits

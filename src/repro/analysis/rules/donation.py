@@ -1,0 +1,216 @@
+"""donation-safety: donated buffers must be provably fresh at call sites.
+
+``donate_argnums`` tells XLA it may destroy the input buffer.  Donating a
+buffer the caller still references (a parameter, an object attribute, the
+un-copied result of ``device_put`` — which may *alias* host memory) is the
+PR 5 bug class: silent corruption of caller state.  The sanctioned driver
+sequence copies first (``jnp.array(x, copy=True)`` before ``device_put``).
+
+Per file, this rule tracks donating callables three ways:
+
+* ``x = jax.jit(f, donate_argnums=(...))`` — ``x`` donates at those
+  positions;
+* a function whose body ``return``\\ s such a jit is a *donating factory*;
+  names bound from a factory call, or immediate ``factory(...)(args)``
+  invocations, donate at the factory's positions (transitively: a function
+  returning a factory call is itself a factory);
+* call sites then need each donated positional argument to be *fresh*:
+  the result of a call (optimistically treated as a new buffer —
+  ``device_put``/``asarray`` are fresh only if their own input is, since
+  they may alias), or a name assigned from a fresh expression in the same
+  function.  Parameters and attributes are not fresh.
+
+Starred arguments make donated positions unverifiable — those sites carry
+a reasoned suppression documenting the callable's contract.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.framework import FileContext, Rule, register_rule
+from repro.analysis.rules._common import call_target, tail_name
+
+_JIT_NAMES = {"jit", "pjit"}
+_ALIASING = {"device_put", "asarray"}
+
+
+def _donate_argnums(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """Literal donate_argnums of a jit call, or None."""
+    if tail_name(call_target(call)) not in _JIT_NAMES:
+        return None
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                nums = tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, int))
+                if nums:
+                    return nums
+            return ()  # donating, positions not statically known
+    return None
+
+
+class _Factories:
+    """Functions returning a donating jit — directly or through another
+    factory (fixpoint).  Lookups are scope-aware: two local factories may
+    share a name (both engines call theirs ``jitted``), so a reference
+    resolves only to a candidate defined at module level or in a scope
+    enclosing the reference."""
+
+    def __init__(self, ctx: FileContext):
+        self._ctx = ctx
+        # name -> [(def node, enclosing fn or None, nums or None, inner)]
+        self._by_name: Dict[str, List[list]] = {}
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for ret in ast.walk(node):
+                if not (isinstance(ret, ast.Return)
+                        and isinstance(ret.value, ast.Call)
+                        and ctx.enclosing_function(ret) is node):
+                    continue
+                nums = _donate_argnums(ret.value)
+                inner = (None if nums
+                         else tail_name(call_target(ret.value)))
+                self._by_name.setdefault(node.name, []).append(
+                    [node, ctx.enclosing_function(node), nums, inner])
+        changed = True
+        while changed:
+            changed = False
+            for entries in self._by_name.values():
+                for e in entries:
+                    if e[2] is None and e[3]:
+                        nums = self.lookup(e[3], e[0])
+                        if nums:
+                            e[2] = nums
+                            changed = True
+
+    def lookup(self, name: Optional[str], at_node: ast.AST
+               ) -> Optional[Tuple[int, ...]]:
+        """Donated positions of factory ``name`` as visible from
+        ``at_node``'s scope, or None."""
+        if not name:
+            return None
+        ancestors = {id(p) for p in self._ctx.parents(at_node)}
+        for _node, enclosing, nums, _inner in self._by_name.get(name, []):
+            if nums and (enclosing is None or id(enclosing) in ancestors):
+                return nums
+        return None
+
+
+def _is_fresh(expr: ast.AST, assigns: Dict[str, List[ast.AST]],
+              depth: int = 0) -> bool:
+    if depth > 8:
+        return False
+    if isinstance(expr, ast.Constant):
+        return True
+    if isinstance(expr, ast.Call):
+        if tail_name(call_target(expr)) in _ALIASING:
+            # may alias its input; fresh only if that input is
+            return bool(expr.args) and _is_fresh(expr.args[0], assigns,
+                                                 depth + 1)
+        return True  # optimistic: call results are new buffers
+    if isinstance(expr, ast.Name):
+        return any(_is_fresh(v, assigns, depth + 1)
+                   for v in assigns.get(expr.id, []))
+    return False  # attributes, subscripts, parameters: caller-visible state
+
+
+def _assignments(fn: Optional[ast.AST], ctx: FileContext
+                 ) -> Dict[str, List[ast.AST]]:
+    scope = fn if fn is not None else ctx.tree
+    out: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.setdefault(t.id, []).append(node.value)
+        elif isinstance(node, (ast.For, ast.comprehension)):
+            t = node.target
+            if isinstance(t, ast.Name):
+                # loop variables come from iteration — treat as fresh calls
+                out.setdefault(t.id, []).append(ast.Call(
+                    func=ast.Name(id="iter", ctx=ast.Load()),
+                    args=[], keywords=[]))
+    return out
+
+
+@register_rule
+class DonationSafety(Rule):
+    name = "donation-safety"
+    description = ("call sites of donate_argnums-jitted callables must pass "
+                   "provably fresh buffers at donated positions — donating "
+                   "caller-held state lets XLA destroy it")
+
+    def applies_to(self, path: str) -> bool:
+        return "src/repro/" in path and "/analysis/" not in path
+
+    def check(self, ctx: FileContext) -> Iterable[Tuple[ast.AST, str]]:
+        factories = _Factories(ctx)
+
+        # names bound to donating callables, per enclosing function scope
+        donating: Dict[Tuple[Optional[ast.AST], str], Tuple[int, ...]] = {}
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            if not isinstance(node.value, ast.Call):
+                continue
+            nums = _donate_argnums(node.value)
+            if not nums:
+                nums = factories.lookup(
+                    tail_name(call_target(node.value)), node)
+            if not nums:
+                continue
+            fn = ctx.enclosing_function(node)
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    donating[(fn, t.id)] = nums
+
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            nums: Optional[Tuple[int, ...]] = None
+            label = None
+            if isinstance(node.func, ast.Name):
+                # resolve through the lexical scope chain: the donating
+                # name may be bound in an enclosing function or at module
+                # level while the call sits in a nested closure
+                fn = ctx.enclosing_function(node)
+                scopes: List[Optional[ast.AST]] = [fn]
+                scopes += [p for p in ctx.parents(node) if isinstance(
+                    p, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))]
+                scopes.append(None)
+                for scope in scopes:
+                    nums = donating.get((scope, node.func.id))
+                    if nums:
+                        break
+                label = node.func.id
+            elif isinstance(node.func, ast.Call):
+                # factory(...)(args...): the inner call builds the jit
+                inner = tail_name(call_target(node.func))
+                nums = factories.lookup(inner, node)
+                if nums:
+                    label = f"{inner}(...)"
+            if not nums:
+                continue
+            if any(isinstance(a, ast.Starred) for a in node.args):
+                yield node, (f"cannot verify donated argument positions "
+                             f"{tuple(nums)} of {label} — starred arguments "
+                             "obscure which buffer is donated")
+                continue
+            fn = ctx.enclosing_function(node)
+            assigns = _assignments(fn, ctx)
+            for pos in nums:
+                if pos >= len(node.args):
+                    continue
+                arg = node.args[pos]
+                if not _is_fresh(arg, assigns):
+                    desc = (arg.id if isinstance(arg, ast.Name)
+                            else ast.dump(arg)[:40])
+                    yield arg, (f"argument {pos} of {label} is donated but "
+                                f"'{desc}' is not provably fresh — copy "
+                                "(jnp.array(x, copy=True)) before donating")

@@ -1,0 +1,93 @@
+"""jit-cache: no fresh callables handed to ``jax.jit``/``shard_map`` from
+inside functions, outside the keyed-cache idiom.
+
+``jax.jit`` keys its executable cache on the *identity* of the wrapped
+callable (plus abstract avals).  A lambda, a fresh ``functools.partial``,
+a local closure, or the result of a factory call constructed inside a
+function body is a new object every invocation, so every call recompiles —
+the exact regression PR 4 hand-fixed in the streaming engine.  The repo's
+sanctioned pattern is a module-level ``functools.lru_cache``-ed factory
+(``_sharded_als_jit`` et al.), where a fresh closure per *cache miss* is
+the point.
+
+Flags ``jit``/``shard_map``/``pjit``/``pallas_call`` first arguments that
+are lambdas, ``partial(...)`` calls, direct call results, locally-``def``-ed
+closures, or names assigned from a call — when the wrapping happens inside
+a function that is neither ``lru_cache``/``cache``-decorated nor at module
+scope.  One-shot launchers and per-instance ``__init__`` wrapping waive
+with a reason.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Tuple
+
+from repro.analysis.framework import FileContext, Rule, register_rule
+from repro.analysis.rules._common import (
+    assigned_from_call, call_target, in_cached_factory,
+    local_function_names, tail_name,
+)
+
+_WRAPPERS = {"jit", "shard_map", "_shard_map", "pjit"}
+
+
+@register_rule
+class JitCache(Rule):
+    name = "jit-cache"
+    description = ("fresh lambdas/partials/closures must not be passed to "
+                   "jax.jit/shard_map outside module scope or keyed-cache "
+                   "factories — identity-keyed caches recompile per call")
+
+    def applies_to(self, path: str) -> bool:
+        return "src/repro/" in path and "/analysis/" not in path
+
+    def check(self, ctx: FileContext) -> Iterable[Tuple[ast.AST, str]]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if tail_name(call_target(node)) not in _WRAPPERS:
+                continue
+            fn = ctx.enclosing_function(node)
+            if fn is None:
+                continue  # module scope: wrapped exactly once at import
+            if in_cached_factory(ctx, node):
+                continue  # the repo's keyed-cache factory idiom
+            if not node.args:
+                continue
+            wrapper = tail_name(call_target(node))
+            wrapped = node.args[0]
+
+            if isinstance(wrapped, ast.Lambda):
+                yield node, (f"lambda passed to {wrapper} inside a function "
+                             "— a fresh callable every call defeats the "
+                             "executable cache")
+            elif isinstance(wrapped, ast.Call):
+                inner = tail_name(call_target(wrapped)) or "a call"
+                yield node, (f"{wrapper} wraps the fresh result of "
+                             f"{inner}(...) — cache the wrapped callable "
+                             "(module-level lru_cache factory) instead")
+            elif isinstance(wrapped, ast.Name):
+                # look through the whole enclosing-function chain: wrapping
+                # a closure from *any* non-cached ancestor scope still
+                # builds a fresh jit/shard_map object per call of `fn`
+                name = wrapped.id
+                scopes = [fn] + [p for p in ctx.parents(fn) if isinstance(
+                    p, (ast.FunctionDef, ast.AsyncFunctionDef))]
+                for scope in scopes:
+                    if isinstance(scope, ast.Lambda):
+                        continue
+                    params = {a.arg for a in (*scope.args.posonlyargs,
+                                              *scope.args.args,
+                                              *scope.args.kwonlyargs)}
+                    if name in params:
+                        break  # parameter shadows any outer binding
+                    if name in local_function_names(scope):
+                        yield node, (f"{wrapper} wraps closure '{name}' — "
+                                     "a fresh wrapped object per call; "
+                                     "hoist into a keyed-cache factory")
+                        break
+                    if name in assigned_from_call(scope, [name]):
+                        yield node, (f"{wrapper} wraps '{name}', built by "
+                                     "a factory call — a fresh callable "
+                                     "identity per invocation")
+                        break

@@ -1,0 +1,163 @@
+"""pallas-purity: kernel bodies must stay device-pure.
+
+A Pallas kernel runs on-device per grid step; anything it does beyond
+reading its refs and writing its output refs is a bug that traces fine and
+fails (or silently lies) at run time: mutating Python state it closes over
+executes once at trace, host APIs don't exist on device, and
+``global``/``nonlocal`` writes are trace-time side effects.
+
+For every ``pl.pallas_call(kernel, ...)`` this rule resolves the kernel —
+a direct ``def``, or ``functools.partial(kernel_fn, ...)`` (the repo's
+flash-attention idiom) — and flags, inside the body:
+
+* ``global`` / ``nonlocal`` statements;
+* stores through any name that is not a kernel parameter or kernel-local
+  (``table[i] = x`` against module or closure state);
+* mutating method calls (``append``/``update``/...) on such names;
+* host API calls (``print``, ``open``, ``os.*``, ``time.*``, ...).
+
+Reading closed-over *immutable* config (block sizes) is fine and not
+flagged — freshness of reads is the jit-cache rule's territory.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.framework import FileContext, Rule, register_rule
+from repro.analysis.rules._common import call_target, tail_name
+
+_HOST_CALLS = {"print", "open", "input", "breakpoint", "exec", "eval"}
+_HOST_ROOTS = {"os", "sys", "io", "time", "logging", "random", "socket"}
+_MUTATORS = {"append", "extend", "update", "add", "pop", "insert",
+             "remove", "setdefault", "clear", "popitem"}
+
+
+def _kernel_candidates(ctx: FileContext) -> List[Tuple[ast.AST, ast.AST]]:
+    """(pallas_call node, kernel expr) pairs."""
+    out = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and \
+                tail_name(call_target(node)) == "pallas_call" and node.args:
+            out.append((node, node.args[0]))
+    return out
+
+
+def _resolve(ctx: FileContext, expr: ast.AST) -> Optional[ast.AST]:
+    """Kernel FunctionDef/Lambda for the expression passed to pallas_call."""
+    if isinstance(expr, ast.Lambda):
+        return expr
+    if isinstance(expr, ast.Call) and \
+            tail_name(call_target(expr)) == "partial" and expr.args:
+        expr = expr.args[0]
+    if isinstance(expr, ast.Name):
+        wanted = expr.id
+    elif isinstance(expr, ast.Attribute):
+        wanted = expr.attr
+    else:
+        return None
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node.name == wanted:
+            return node
+    return None
+
+
+def _binding_names(target: ast.AST) -> Set[str]:
+    """Names *bound* by an assignment target — a plain name or a
+    destructuring element, NOT the base of a subscript/attribute store
+    (``table[i] = x`` binds nothing; it mutates ``table``)."""
+    if isinstance(target, ast.Name):
+        return {target.id}
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: Set[str] = set()
+        for e in target.elts:
+            out |= _binding_names(e)
+        return out
+    if isinstance(target, ast.Starred):
+        return _binding_names(target.value)
+    return set()
+
+
+def _local_names(kernel: ast.AST) -> Set[str]:
+    args = kernel.args
+    names = {a.arg for a in (*args.posonlyargs, *args.args,
+                             *args.kwonlyargs)}
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    for node in ast.walk(kernel):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                names |= _binding_names(t)
+        elif isinstance(node, ast.NamedExpr) and \
+                isinstance(node.target, ast.Name):
+            names.add(node.target.id)
+        elif isinstance(node, (ast.For, ast.comprehension)):
+            names |= _binding_names(node.target)
+        elif isinstance(node, ast.withitem) and node.optional_vars:
+            names |= _binding_names(node.optional_vars)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node is not kernel:
+            names.add(node.name)
+    return names
+
+
+def _store_base(target: ast.AST) -> Optional[str]:
+    while isinstance(target, (ast.Subscript, ast.Attribute)):
+        target = target.value
+    return target.id if isinstance(target, ast.Name) else None
+
+
+@register_rule
+class PallasPurity(Rule):
+    name = "pallas-purity"
+    description = ("Pallas kernel bodies must not mutate closed-over or "
+                   "global state, call host APIs, or use global/nonlocal — "
+                   "kernels run on-device per grid step")
+
+    def check(self, ctx: FileContext) -> Iterable[Tuple[ast.AST, str]]:
+        seen: Set[int] = set()
+        for _call, expr in _kernel_candidates(ctx):
+            kernel = _resolve(ctx, expr)
+            if kernel is None or id(kernel) in seen:
+                continue
+            seen.add(id(kernel))
+            locals_ = _local_names(kernel)
+            kname = getattr(kernel, "name", "<lambda>")
+            for node in ast.walk(kernel):
+                if isinstance(node, (ast.Global, ast.Nonlocal)):
+                    kind = ("global" if isinstance(node, ast.Global)
+                            else "nonlocal")
+                    yield node, (f"kernel '{kname}' uses {kind} — a "
+                                 "trace-time side effect, not a device op")
+                elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = (node.targets if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        if not isinstance(t, (ast.Subscript, ast.Attribute)):
+                            continue
+                        base = _store_base(t)
+                        if base is not None and base not in locals_:
+                            yield node, (
+                                f"kernel '{kname}' stores through "
+                                f"'{base}', which it closes over — kernels "
+                                "may only write their refs")
+                elif isinstance(node, ast.Call):
+                    target = call_target(node)
+                    tail = tail_name(target)
+                    if isinstance(node.func, ast.Name) and \
+                            node.func.id in _HOST_CALLS:
+                        yield node, (f"kernel '{kname}' calls host API "
+                                     f"{node.func.id}()")
+                    elif target and target.split(".", 1)[0] in _HOST_ROOTS:
+                        yield node, (f"kernel '{kname}' calls host API "
+                                     f"{target}()")
+                    elif (isinstance(node.func, ast.Attribute)
+                          and tail in _MUTATORS
+                          and isinstance(node.func.value, ast.Name)
+                          and node.func.value.id not in locals_):
+                        yield node, (
+                            f"kernel '{kname}' mutates closed-over "
+                            f"'{node.func.value.id}' via .{tail}()")

@@ -1,0 +1,103 @@
+"""psum-axis: collective axis names must be declared mesh axes.
+
+``lax.psum(x, "modle")`` traces fine under an un-checked ``shard_map``
+(the repo runs ``SHARD_MAP_NO_CHECK``) and fails — or worse, silently
+skips the reduction — only when the mesh binds.  Axis-name typos are
+pure string bugs, so they are exactly what a repo-wide pass can kill.
+
+``begin_run`` harvests the declared axis vocabulary from every analyzed
+file: string constants inside ``Mesh(...)``/``make_mesh(...)``/
+``AbstractMesh(...)`` calls, ``axis_names=...`` keywords anywhere, and —
+because the repo's mesh module builds the tuple first — string constants
+in assignments to names later passed into those calls.  ``check`` then
+flags any *string literal* axis argument of a collective
+(``psum``/``all_gather``/``pmean``/...) outside the vocabulary.  Axis
+names passed as variables are out of scope (the engine threads
+``rows_axes``/``cols_axis`` values, which this rule cannot resolve), and
+the rule stays silent when no mesh declaration is visible at all.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Sequence, Set, Tuple
+
+from repro.analysis.framework import FileContext, Rule, register_rule
+from repro.analysis.rules._common import (
+    call_target, string_constants, tail_name,
+)
+
+_MESH_CTORS = {"Mesh", "make_mesh", "AbstractMesh"}
+#: collective -> positional index of its axis-name argument
+_COLLECTIVES = {
+    "psum": 1, "pmean": 1, "pmax": 1, "pmin": 1, "psum_scatter": 1,
+    "all_gather": 1, "all_to_all": 1, "ppermute": 1, "pbroadcast": 1,
+    "axis_index": 0, "axis_size": 0,
+}
+
+
+def _harvest(ctx: FileContext) -> Set[str]:
+    declared: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tail = tail_name(call_target(node))
+        if tail in _MESH_CTORS:
+            for arg in (*node.args, *[kw.value for kw in node.keywords]):
+                declared.update(string_constants(arg))
+                # mesh.py builds the axes tuple first: axes = (...) if ...
+                if isinstance(arg, ast.Name):
+                    fn = ctx.enclosing_function(node)
+                    scope = fn if fn is not None else ctx.tree
+                    for a in ast.walk(scope):
+                        if isinstance(a, ast.Assign) and any(
+                                isinstance(t, ast.Name) and t.id == arg.id
+                                for t in a.targets):
+                            declared.update(string_constants(a.value))
+        else:
+            for kw in node.keywords:
+                if kw.arg in ("axis_names", "axis_name") and tail not in \
+                        _COLLECTIVES:
+                    declared.update(string_constants(kw.value))
+    return declared
+
+
+@register_rule
+class PsumAxis(Rule):
+    name = "psum-axis"
+    description = ("string axis names in psum/all_gather/pmean/... must be "
+                   "declared mesh axes somewhere in the analyzed tree — "
+                   "typos surface only at mesh-bind time")
+
+    def __init__(self):
+        self._declared: Set[str] = set()
+
+    def begin_run(self, contexts: Sequence[FileContext]) -> None:
+        self._declared = set()
+        for ctx in contexts:
+            self._declared |= _harvest(ctx)
+
+    def check(self, ctx: FileContext) -> Iterable[Tuple[ast.AST, str]]:
+        if not self._declared:
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            tail = tail_name(call_target(node))
+            if tail not in _COLLECTIVES:
+                continue
+            axis_expr = None
+            for kw in node.keywords:
+                if kw.arg == "axis_name":
+                    axis_expr = kw.value
+            if axis_expr is None:
+                pos = _COLLECTIVES[tail]
+                if pos < len(node.args):
+                    axis_expr = node.args[pos]
+            if axis_expr is None:
+                continue
+            for name in string_constants(axis_expr):
+                if name not in self._declared:
+                    yield node, (
+                        f"{tail} over axis {name!r}, which no analyzed "
+                        f"Mesh declares (known axes: "
+                        f"{', '.join(sorted(self._declared))})")

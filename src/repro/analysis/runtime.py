@@ -1,0 +1,100 @@
+"""Runtime contract layer: assert *zero* XLA compilations happened.
+
+The static rules prove call *shapes* can't thrash the executable cache;
+this is the dynamic complement, asserting the compiler's own counter.  jax
+emits the monitoring event ``/jax/core/compile/backend_compile_duration``
+exactly once per real backend (XLA) compilation and never on an
+executable-cache hit, so counting it is ground truth — no probing of
+private cache sizes, no heuristics over trace counts::
+
+    with recompile_guard():                # 0 compiles allowed
+        model.fit(a)                       # second identical fit: free
+
+    with recompile_guard(max_compiles=2) as counter:
+        cold_path()
+    assert counter.count <= 2
+
+On a jax without the monitoring hooks, ``recompile_guard`` raises unless
+``allow_unsupported=True``, in which case it degrades to a no-op whose
+counter reports ``supported=False`` (callers should skip, not pass).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator, List
+
+__all__ = ["recompile_guard", "CompilationCounter", "RecompilationError",
+           "COMPILE_EVENT"]
+
+#: fired once per backend_compile; cache hits never emit it
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+class RecompilationError(AssertionError):
+    """More XLA compilations happened inside a guard than allowed."""
+
+
+@dataclasses.dataclass
+class CompilationCounter:
+    """Live tally of backend compilations observed inside a guard."""
+
+    count: int = 0
+    events: List[str] = dataclasses.field(default_factory=list)
+    supported: bool = True
+
+    def _observe(self, event: str) -> None:
+        self.count += 1
+        self.events.append(event)
+
+
+def _monitoring():
+    try:
+        from jax._src import monitoring
+    except ImportError:
+        return None
+    if not (hasattr(monitoring, "register_event_duration_secs_listener")
+            and hasattr(monitoring,
+                        "_unregister_event_duration_listener_by_callback")):
+        return None
+    return monitoring
+
+
+@contextlib.contextmanager
+def recompile_guard(max_compiles: int = 0, *, allow_unsupported: bool = False
+                    ) -> Iterator[CompilationCounter]:
+    """Fail if the block triggers more than ``max_compiles`` XLA
+    compilations.
+
+    Yields the :class:`CompilationCounter` so callers can also assert
+    exact counts (positive controls) or inspect the observed events.  The
+    check runs at block exit; an exception already propagating wins over
+    the guard's own error.
+    """
+    monitoring = _monitoring()
+    counter = CompilationCounter(supported=monitoring is not None)
+    if monitoring is None:
+        if not allow_unsupported:
+            raise RuntimeError(
+                "recompile_guard needs jax._src.monitoring event-duration "
+                "listeners; pass allow_unsupported=True to degrade to a "
+                "no-op (and skip the assertion yourself)")
+        yield counter
+        return
+
+    def _listener(event: str, duration_secs: float, **kwargs) -> None:
+        if event == COMPILE_EVENT:
+            counter._observe(event)
+
+    monitoring.register_event_duration_secs_listener(_listener)
+    try:
+        yield counter
+    finally:
+        monitoring._unregister_event_duration_listener_by_callback(_listener)
+    if counter.count > max_compiles:
+        raise RecompilationError(
+            f"{counter.count} XLA compilation(s) inside a "
+            f"recompile_guard(max_compiles={max_compiles}) block — "
+            "something is thrashing the executable cache (fresh "
+            "lambda/partial into jit, unstable static args, or changing "
+            "avals)")

@@ -63,10 +63,10 @@ class JnpDenseBackend(LocalExecution):
         if isinstance(a, SpCSR):
             from repro.sparse.csr import to_dense
 
-            a = to_dense(a)
+            a = to_dense(a)  # repro: allow[no-densify] this IS the dense reference backend — densifying is its contract
             return a if dtype is None else a.astype(dtype)
         if hasattr(a, "toarray"):  # scipy sparse (an explicitly dense ask)
-            a = a.toarray()
+            a = a.toarray()  # repro: allow[no-densify] dense backend ingest boundary; caller chose jnp-dense
         return jnp.asarray(a, dtype=dtype)
 
     def matmul(self, a, v):

@@ -416,7 +416,7 @@ def make_sharded_als(
 
     def run(a, u0: jax.Array, iters: int):
         shape = a.shape if fmt.needs_shape else None
-        return jitted(iters, shape)(*fmt.leaves(a), u0)
+        return jitted(iters, shape)(*fmt.leaves(a), u0)  # repro: allow[donation-safety] donated u0 rides after the starred leaves by contract; solve_distributed copies it before device_put (see docstring)
 
     return _attach_engine_api(run, fmt, mesh, tuple(rows_axes), cols_axis,
                               be, shard_fn, jitted)
@@ -526,7 +526,7 @@ def make_sharded_online(
     def run(a_chunk, u: jax.Array, stats, iters: int, forget=1.0):
         forget = jnp.asarray(forget, dtype=u.dtype)
         shape = a_chunk.shape if fmt.needs_shape else None
-        return jitted(iters, shape)(*fmt.leaves(a_chunk), u, stats.av,
+        return jitted(iters, shape)(*fmt.leaves(a_chunk), u, stats.av,  # repro: allow[donation-safety] donated av/gv are the estimator-internal accumulators the returned stats replace; u is not donated (docstring)
                                     stats.gv, forget)
 
     return _attach_engine_api(run, fmt, mesh, tuple(rows_axes), cols_axis,

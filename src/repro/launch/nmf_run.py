@@ -90,7 +90,7 @@ def nmf_dryrun_cell(mesh: jax.sharding.Mesh, *,
     )
     t0 = time.time()
     with set_mesh(mesh):
-        jitted = jax.jit(
+        jitted = jax.jit(  # repro: allow[jit-cache] one-shot benchmark harness; jitted once then AOT-lowered for the memory analysis
             run.shard_fn(iters),
             in_shardings=shardings,
             out_shardings=out_shardings,

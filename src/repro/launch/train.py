@@ -68,7 +68,7 @@ def main(argv=None):
                        is_leaf=lambda x: isinstance(x, P))
 
     with jax.set_mesh(mesh):
-        init_fn = jax.jit(lambda key: api.init_params(cfg, key), out_shardings=psh)
+        init_fn = jax.jit(lambda key: api.init_params(cfg, key), out_shardings=psh)  # repro: allow[jit-cache] one-shot launcher init; jitted exactly once per process
         params = init_fn(jax.random.PRNGKey(0))
         opt_state = opt.init(params)
         start = 0
@@ -86,7 +86,7 @@ def main(argv=None):
                 params, opt_state = state
                 start = last
 
-        step_fn = jax.jit(api.make_train_step(cfg, opt), donate_argnums=(0, 1))
+        step_fn = jax.jit(api.make_train_step(cfg, opt), donate_argnums=(0, 1))  # repro: allow[jit-cache] built once per launcher run; the step loop reuses this one object
         t0 = time.time()
         for step in range(start, args.steps):
             batch = synthetic_batch(cfg, shape, step)

@@ -13,6 +13,7 @@ logits — noted in DESIGN.md §Arch-applicability.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Dict, Optional, Tuple
 
@@ -154,6 +155,25 @@ def _moe_local(cfg: ArchConfig, e_shards: int, dp_axes, capacity_factor: float):
     return body
 
 
+@functools.lru_cache(maxsize=None)
+def _moe_shard_fn(cfg: ArchConfig, mesh, e_shards: int, dp_axes,
+                  capacity_factor: float):
+    # module-level keyed cache (cfg is a frozen dataclass, meshes hash):
+    # the shard_mapped body must keep one identity across decode steps or
+    # every eager call re-wraps — and re-traces — the expert interior
+    from jax.sharding import PartitionSpec as P
+
+    body = _moe_local(cfg, e_shards, dp_axes, capacity_factor)
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P("model", None, None), P("model", None, None),
+                  P("model", None, None), P(dp_axes, "model", None)),
+        out_specs=P(dp_axes, "model", None),
+        check_vma=False,
+    )
+
+
 def moe_ffn_ep(p: Params, x3d: jax.Array, cfg: ArchConfig,
                capacity_factor: float = 1.25) -> jax.Array:
     """Expert-parallel MoE over the ambient mesh via shard_map.
@@ -175,16 +195,7 @@ def moe_ffn_ep(p: Params, x3d: jax.Array, cfg: ArchConfig,
     if b % dp_div or s_len % e_shards:
         return moe_ffn(p, x3d.reshape(1, b * s_len, d), cfg,
                        capacity_factor)[0].reshape(b, s_len, d)
-    from jax.sharding import PartitionSpec as P
-    body = _moe_local(cfg, e_shards, dp_axes, capacity_factor)
-    fn = jax.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(), P("model", None, None), P("model", None, None),
-                  P("model", None, None), P(dp_axes, "model", None)),
-        out_specs=P(dp_axes, "model", None),
-        check_vma=False,
-    )
+    fn = _moe_shard_fn(cfg, mesh, e_shards, dp_axes, capacity_factor)
     return fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x3d)
 
 

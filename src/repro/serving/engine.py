@@ -44,8 +44,8 @@ class ServingEngine:
             raise NotImplementedError("use encdec.prefill/decode_step directly")
         else:
             self.cache = mod.init_cache(cfg, max_batch, max_seq)
-        self._decode = jax.jit(api.make_decode_step(cfg))
-        self._forward = jax.jit(
+        self._decode = jax.jit(api.make_decode_step(cfg))  # repro: allow[jit-cache] __init__ wraps once per engine and stores on self; every decode step reuses it
+        self._forward = jax.jit(  # repro: allow[jit-cache] __init__ wraps once per engine and stores on self; every prefill reuses it
             lambda p, t: api.module_for(cfg).forward(p, t, cfg, remat=False)
         )
         self.slots: List[Optional[Request]] = [None] * max_batch

@@ -37,22 +37,13 @@ def sparsify_tree(grads: Params, density: float) -> Tuple[Params, Params]:
     return sparse, err
 
 
-def make_compressed_grad_fn(
-    loss_fn: Callable,            # (params, batch) -> scalar loss
-    mesh: jax.sharding.Mesh,
-    data_axes: Tuple[str, ...],
-    density: float = 0.01,
-):
-    """Manual-DP gradient with top-k compression + error feedback.
-
-    params are replicated across ``data_axes``; the batch is sharded on its
-    leading axis; the error-feedback state has a *sharded leading replica
-    axis* (one slot per DP rank — this is error feedback's real memory cost,
-    one extra param copy per rank).
-
-    Returns ``grad_fn(params, batch, err_state) -> (loss, grads, err_state)``
-    suitable to feed any optimizer.
-    """
+@functools.lru_cache(maxsize=None)
+def _compressed_shard_fn(loss_fn, mesh, data_axes, density,
+                         params_def, batch_def, err_def, err_ndims):
+    # module-level keyed cache: the shard_mapped callable's identity is the
+    # executable-cache key, so it must be reused across grad_fn calls — a
+    # rebuild per step recompiles per step.  Keyed on the structural facts
+    # the specs depend on (treedefs + error-leaf ranks).
     ndp = 1
     for a in data_axes:
         ndp *= mesh.shape[a]
@@ -69,26 +60,49 @@ def make_compressed_grad_fn(
         new_err = jax.tree.map(lambda e: e[None], new_err)
         return loss, g_avg, new_err
 
-    def specs_for(tree_example, leading_replica: bool):
-        def spec(_):
-            return P(data_axes) if leading_replica else P()
-        return jax.tree.map(lambda l: P(data_axes, *([None] * l.ndim)) if leading_replica else P(), tree_example)
+    def replicated(treedef):
+        return jax.tree.unflatten(treedef, [P()] * treedef.num_leaves)
+
+    err_specs = jax.tree.unflatten(
+        err_def, [P(data_axes, *([None] * (nd - 1))) for nd in err_ndims])
+    in_specs = (
+        replicated(params_def),
+        jax.tree.unflatten(batch_def, [P(data_axes)] * batch_def.num_leaves),
+        err_specs,
+    )
+    out_specs = (P(), replicated(params_def), err_specs)
+    return _shard_map(
+        local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **SHARD_MAP_NO_CHECK,
+    )
+
+
+def make_compressed_grad_fn(
+    loss_fn: Callable,            # (params, batch) -> scalar loss
+    mesh: jax.sharding.Mesh,
+    data_axes: Tuple[str, ...],
+    density: float = 0.01,
+):
+    """Manual-DP gradient with top-k compression + error feedback.
+
+    params are replicated across ``data_axes``; the batch is sharded on its
+    leading axis; the error-feedback state has a *sharded leading replica
+    axis* (one slot per DP rank — this is error feedback's real memory cost,
+    one extra param copy per rank).
+
+    Returns ``grad_fn(params, batch, err_state) -> (loss, grads, err_state)``
+    suitable to feed any optimizer.  The shard_mapped step comes from a
+    module-level cache keyed on ``(loss_fn, mesh, data_axes, density,
+    treedefs)``, so repeated steps reuse one compiled executable.
+    """
+    data_axes = tuple(data_axes)
 
     def grad_fn(params, batch, err_state):
-        in_specs = (
-            jax.tree.map(lambda _: P(), params),
-            jax.tree.map(lambda _: P(data_axes), batch),
-            jax.tree.map(lambda l: P(data_axes, *([None] * (l.ndim - 1))), err_state),
-        )
-        out_specs = (
-            P(),
-            jax.tree.map(lambda _: P(), params),
-            jax.tree.map(lambda l: P(data_axes, *([None] * (l.ndim - 1))), err_state),
-        )
-        fn = _shard_map(
-            local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            **SHARD_MAP_NO_CHECK,
-        )
+        err_leaves, err_def = jax.tree.flatten(err_state)
+        fn = _compressed_shard_fn(
+            loss_fn, mesh, data_axes, density,
+            jax.tree.structure(params), jax.tree.structure(batch),
+            err_def, tuple(l.ndim for l in err_leaves))
         return fn(params, batch, err_state)
 
     return grad_fn

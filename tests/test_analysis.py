@@ -1,0 +1,326 @@
+"""The hygiene analyzer: per-rule fixtures (known-bad flagged, known-good
+clean, suppressed-with-reason waived), the suppression ledger's own rules,
+reporter shapes, the CLI exit-code contract — and the gate itself: the repo
+must analyze clean.
+
+Everything here is stdlib-only (the static side never imports jax).
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze_paths, analyze_source, render_json
+
+REPO = Path(__file__).resolve().parents[1]
+
+HOT = "src/repro/sparse/fixture.py"       # inside no-densify's scope
+COLD = "src/repro/launch/fixture.py"      # outside it
+
+
+def active(findings, rule=None):
+    out = [f for f in findings if not f.suppressed]
+    if rule is not None:
+        out = [f for f in out if f.rule == rule]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# no-densify
+# ---------------------------------------------------------------------------
+
+def test_no_densify_flags_toarray_and_asarray_on_sparse():
+    src = (
+        "import numpy as np\n"
+        "def f(a: SpCSR):\n"
+        "    x = a.toarray()\n"
+        "    y = np.asarray(a)\n"
+        "    return x, y\n"
+    )
+    rules = [f.rule for f in active(analyze_source(src, path=HOT))]
+    assert rules.count("no-densify") == 2
+
+
+def test_no_densify_flags_dense_allocation_from_sparse_shape():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(a: SpCSR):\n"
+        "    n, m = a.shape\n"
+        "    direct = jnp.zeros(a.shape)\n"
+        "    unpacked = jnp.zeros((n, m))\n"
+        "    return direct, unpacked\n"
+    )
+    assert len(active(analyze_source(src, path=HOT), "no-densify")) == 2
+
+
+def test_no_densify_good_code_passes():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(a: SpCSR, k: int):\n"
+        "    n, m = a.shape\n"
+        "    u = jnp.zeros((n, k))\n"     # factor-width: fine
+        "    d = jnp.asarray([1.0])\n"    # not a sparse operand
+        "    return u, d\n"
+    )
+    assert not active(analyze_source(src, path=HOT), "no-densify")
+
+
+def test_no_densify_scoped_to_hot_packages():
+    src = "def f(a: SpCSR):\n    return a.toarray()\n"
+    assert active(analyze_source(src, path=HOT), "no-densify")
+    assert not active(analyze_source(src, path=COLD), "no-densify")
+
+
+def test_no_densify_suppressed_with_reason():
+    src = (
+        "def f(a: SpCSR):\n"
+        "    return a.toarray()  # repro: allow[no-densify] tiny test oracle\n"
+    )
+    findings = analyze_source(src, path=HOT)
+    assert not active(findings)
+    (sup,) = [f for f in findings if f.suppressed]
+    assert sup.rule == "no-densify" and sup.reason == "tiny test oracle"
+
+
+# ---------------------------------------------------------------------------
+# jit-cache
+# ---------------------------------------------------------------------------
+
+def test_jit_cache_flags_lambda_partial_and_closure():
+    src = (
+        "import functools, jax\n"
+        "def f(x):\n"
+        "    a = jax.jit(lambda v: v)(x)\n"
+        "    b = jax.jit(functools.partial(max, 0))(x)\n"
+        "    def local(v):\n"
+        "        return v\n"
+        "    c = jax.jit(local)(x)\n"
+        "    return a, b, c\n"
+    )
+    assert len(active(analyze_source(src, path=COLD), "jit-cache")) == 3
+
+
+def test_jit_cache_sees_through_nested_scopes():
+    # the compression.py bug shape: closure built in the maker, wrapped
+    # anew on every call of the inner function
+    src = (
+        "import jax\n"
+        "def make(mesh):\n"
+        "    def local_fn(v):\n"
+        "        return v\n"
+        "    def step(v):\n"
+        "        return jax.jit(local_fn)(v)\n"
+        "    return step\n"
+    )
+    assert len(active(analyze_source(src, path=COLD), "jit-cache")) == 1
+
+
+def test_jit_cache_allows_module_scope_and_cached_factories():
+    src = (
+        "import functools, jax\n"
+        "g = jax.jit(lambda x: x)\n"                 # wrapped once at import
+        "@functools.lru_cache(maxsize=None)\n"
+        "def factory(n):\n"
+        "    def fn(v):\n"
+        "        return v * n\n"
+        "    return jax.jit(fn)\n"                   # keyed-cache idiom
+    )
+    assert not active(analyze_source(src, path=COLD), "jit-cache")
+
+
+# ---------------------------------------------------------------------------
+# donation-safety
+# ---------------------------------------------------------------------------
+
+def test_donation_flags_unfresh_argument():
+    src = (
+        "import jax\n"
+        "step = jax.jit(max, donate_argnums=(0,))\n"
+        "def run(u):\n"
+        "    return step(u)\n"                       # caller-held buffer
+    )
+    (f,) = active(analyze_source(src, path=COLD), "donation-safety")
+    assert "'u'" in f.message
+
+
+def test_donation_accepts_fresh_and_copied_buffers():
+    src = (
+        "import jax, jax.numpy as jnp\n"
+        "step = jax.jit(max, donate_argnums=(0,))\n"
+        "def run(u):\n"
+        "    u = jax.device_put(jnp.array(u, copy=True))\n"
+        "    return step(u)\n"
+    )
+    assert not active(analyze_source(src, path=COLD), "donation-safety")
+
+
+def test_donation_tracks_factories_and_starred_args():
+    src = (
+        "import jax\n"
+        "def factory():\n"
+        "    return jax.jit(max, donate_argnums=(1,))\n"
+        "def indirect():\n"
+        "    return factory()\n"                     # factory-of-factory
+        "def run(u, leaves):\n"
+        "    bad = indirect()(None, u)\n"            # position 1 not fresh
+        "    unverifiable = factory()(*leaves)\n"    # starred
+        "    return bad, unverifiable\n"
+    )
+    msgs = [f.message for f in
+            active(analyze_source(src, path=COLD), "donation-safety")]
+    assert len(msgs) == 2
+    assert any("not provably fresh" in m for m in msgs)
+    assert any("starred" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# pallas-purity
+# ---------------------------------------------------------------------------
+
+def test_pallas_purity_flags_impure_kernels():
+    src = (
+        "from jax.experimental import pallas as pl\n"
+        "acc = []\n"
+        "def kernel(x_ref, o_ref):\n"
+        "    acc.append(1)\n"                        # mutates closed-over
+        "    print('trace')\n"                       # host API
+        "    o_ref[...] = x_ref[...]\n"
+        "def f(x, shape):\n"
+        "    return pl.pallas_call(kernel, out_shape=shape)(x)\n"
+    )
+    msgs = [f.message for f in
+            active(analyze_source(src, path=COLD), "pallas-purity")]
+    assert len(msgs) == 2
+    assert any("mutates closed-over 'acc'" in m for m in msgs)
+    assert any("host API print" in m for m in msgs)
+
+
+def test_pallas_purity_flags_global_and_foreign_stores():
+    src = (
+        "from jax.experimental import pallas as pl\n"
+        "TABLE = {}\n"
+        "def kernel(x_ref, o_ref):\n"
+        "    global TABLE\n"
+        "    TABLE['x'] = 1\n"
+        "    o_ref[...] = x_ref[...]\n"
+        "def f(x, shape):\n"
+        "    return pl.pallas_call(kernel, out_shape=shape)(x)\n"
+    )
+    msgs = [f.message for f in
+            active(analyze_source(src, path=COLD), "pallas-purity")]
+    assert any("global" in m for m in msgs)
+    assert any("stores through 'TABLE'" in m for m in msgs)
+
+
+def test_pallas_purity_accepts_ref_only_kernel_via_partial():
+    # the flash-attention idiom: functools.partial(kernel, static config)
+    src = (
+        "import functools\n"
+        "from jax.experimental import pallas as pl\n"
+        "def kernel(x_ref, o_ref, *, blk):\n"
+        "    tmp = x_ref[...] * blk\n"
+        "    o_ref[...] = tmp\n"
+        "def f(x, shape):\n"
+        "    k = functools.partial(kernel, blk=8)\n"
+        "    return pl.pallas_call(k, out_shape=shape)(x)\n"
+    )
+    assert not active(analyze_source(src, path=COLD), "pallas-purity")
+
+
+# ---------------------------------------------------------------------------
+# psum-axis
+# ---------------------------------------------------------------------------
+
+def test_psum_axis_catches_typo_against_declared_mesh():
+    src = (
+        "import jax\n"
+        "mesh = jax.make_mesh((1, 1), ('data', 'model'))\n"
+        "def f(x):\n"
+        "    good = jax.lax.psum(x, 'data')\n"
+        "    bad = jax.lax.psum(x, 'modle')\n"
+        "    also = jax.lax.all_gather(x, axis_name='mdoel')\n"
+        "    return good, bad, also\n"
+    )
+    msgs = [f.message for f in
+            active(analyze_source(src, path=COLD), "psum-axis")]
+    assert len(msgs) == 2
+    assert any("'modle'" in m for m in msgs)
+    assert any("'mdoel'" in m for m in msgs)
+
+
+def test_psum_axis_silent_without_mesh_declaration():
+    src = "import jax\ndef f(x):\n    return jax.lax.psum(x, 'anything')\n"
+    assert not active(analyze_source(src, path=COLD), "psum-axis")
+
+
+# ---------------------------------------------------------------------------
+# the suppression ledger's own hygiene
+# ---------------------------------------------------------------------------
+
+def test_reasonless_suppression_is_rejected():
+    src = "def f(a: SpCSR):\n    return a.toarray()  # repro: allow[no-densify]\n"
+    findings = analyze_source(src, path=HOT)
+    rules = sorted(f.rule for f in active(findings))
+    # the waiver is void AND the ledger defect itself is reported
+    assert rules == ["no-densify", "suppression-hygiene"]
+
+
+def test_unknown_rule_in_suppression_is_flagged():
+    # built by concatenation so the repo-wide scan of THIS file's raw lines
+    # doesn't read the fixture literal as a real (stale) suppression
+    src = "x = 1  # repro: " + "allow[no-such-rule] stale waiver\n"
+    (f,) = active(analyze_source(src, path=COLD))
+    assert f.rule == "suppression-hygiene" and "no-such-rule" in f.message
+
+
+# ---------------------------------------------------------------------------
+# reporters, CLI contract, and the repo gate
+# ---------------------------------------------------------------------------
+
+def test_json_report_shape():
+    src = "def f(a: SpCSR):\n    return a.toarray()\n"
+    findings = analyze_source(src, path=HOT)
+    report = json.loads(render_json(findings))
+    assert set(report) == {"findings", "errors", "summary"}
+    assert report["summary"]["active"] == len(findings) >= 1
+    assert not report["summary"]["ok"]
+    rec = report["findings"][0]
+    assert {"rule", "path", "line", "col", "message",
+            "suppressed"} <= set(rec)
+
+
+def _run_cli(args, cwd):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, env=env, capture_output=True, text=True)
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "src" / "repro" / "sparse" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("def f(a: SpCSR):\n    return a.toarray()\n")
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    broken = tmp_path / "broken.py"
+    broken.write_text("def (\n")
+
+    assert _run_cli([str(clean)], tmp_path).returncode == 0
+    r = _run_cli([str(bad), "--format", "json"], tmp_path)
+    assert r.returncode == 1
+    assert json.loads(r.stdout)["summary"]["active"] == 1
+    assert _run_cli([str(broken)], tmp_path).returncode == 2
+
+
+def test_repo_analyzes_clean():
+    """The CI gate, asserted from inside the suite: zero unsuppressed
+    findings and zero parse errors over src + tests + benchmarks, and every
+    suppression carries a reason."""
+    findings, errors = analyze_paths(
+        [str(REPO / "src"), str(REPO / "tests"), str(REPO / "benchmarks")])
+    assert errors == []
+    assert active(findings) == []
+    assert all(f.reason for f in findings if f.suppressed)
