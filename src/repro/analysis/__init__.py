@@ -13,15 +13,31 @@ materialize dense), **jit-cache** (no fresh lambdas/partials/closures into
 (collective axis names are declared mesh axes).  Per-line waivers need a
 reason: ``# repro: allow[<rule>] why``.
 
+IR side (imports jax, runs behind ``--ir``)::
+
+    python -m repro.analysis src --ir [--update-budgets]
+
+jaxpr-level passes over the traced engine entry points: **dense-blowup**
+(no intermediate exceeds a multiple of the sparse-operand footprint),
+**peak-memory** (liveness-planner peak bytes gated against the committed
+``analysis/ir_budgets.json`` ledger), **collectives** (psum axes name the
+enclosing shard_map's mesh axes; donated buffers really alias in the
+executable), and **pallas-tiles** (BlockSpec legality + VMEM working
+sets).  Waivers live in ``analysis/ir_waivers.json`` with mandatory
+reasons, mirroring the AST suppression ledger.
+
 Runtime side (imports jax lazily)::
 
-    from repro.analysis import recompile_guard
+    from repro.analysis import recompile_guard, memory_guard
     with recompile_guard():          # raises if anything XLA-compiles
         model.fit(a)                 # inside the block
+    report = memory_guard(step, *args)   # XLA's own byte accounting
 
 :func:`recompile_guard` counts real XLA compilations through jax's
 monitoring events, so zero-recompile tests assert the compiler's own
-counter instead of probing cache keys.
+counter instead of probing cache keys; :func:`memory_guard` reads
+``compiled.memory_analysis()``, the runtime cross-check of the IR
+peak-memory planner.
 """
 from repro.analysis.framework import (
     Finding, Rule, all_rules, analyze_paths, analyze_source, register_rule,
@@ -32,15 +48,26 @@ __all__ = [
     "Finding", "Rule", "all_rules", "analyze_paths", "analyze_source",
     "register_rule", "render_json", "render_text",
     "recompile_guard", "CompilationCounter", "RecompilationError",
+    "memory_guard", "MemoryReport", "MemoryBudgetError",
+    "run_ir", "IRTarget", "IRPass", "register_ir_pass", "all_ir_passes",
 ]
+
+_RUNTIME_NAMES = ("recompile_guard", "CompilationCounter",
+                  "RecompilationError", "memory_guard", "MemoryReport",
+                  "MemoryBudgetError")
+_IR_NAMES = ("run_ir", "IRTarget", "IRPass", "register_ir_pass",
+             "all_ir_passes")
 
 
 def __getattr__(name):
-    # the runtime contract layer imports jax; keep it lazy so the static
+    # the runtime and IR layers import jax; keep them lazy so the static
     # CLI works in environments without jax installed
-    if name in ("recompile_guard", "CompilationCounter",
-                "RecompilationError"):
+    if name in _RUNTIME_NAMES:
         from repro.analysis import runtime
 
         return getattr(runtime, name)
+    if name in _IR_NAMES:
+        from repro.analysis import ir
+
+        return getattr(ir, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -2,41 +2,78 @@
 
 Exit codes: 0 = clean (suppressed-with-reason findings allowed), 1 = any
 unsuppressed finding or reasonless suppression, 2 = unreadable/unparseable
-input.  ``--format json`` emits the machine-readable report the CI job
-uploads as an artifact.
+input or infra errors.  ``--format json`` emits the machine-readable
+report the CI job uploads as an artifact; ``--output PATH`` writes it to a
+file without shell redirection.
+
+``--ir`` additionally runs the jaxpr-level passes (dense-blowup,
+peak-memory, collectives, pallas-tiles) over the traced engine entry
+points — this half imports jax, so the base invocation stays stdlib-only.
+The mesh targets need 4 devices; when jax is not yet imported the CLI
+forces 4 host devices via XLA_FLAGS so ``--ir`` behaves the same on a
+laptop and in CI.  ``--update-budgets`` re-baselines the committed
+peak-memory ledger (``analysis/ir_budgets.json``) from this run.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
 from repro.analysis.framework import (
     all_rules, analyze_paths, render_json, render_text,
 )
 
+_FORCE_DEVICES_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _force_host_devices(n: int = 4) -> None:
+    """Give the mesh targets enough devices, but only when it is still
+    safe (jax not imported) and not overridden by the caller's XLA_FLAGS."""
+    if "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _FORCE_DEVICES_FLAG in flags:
+        return
+    os.environ["XLA_FLAGS"] = f"{flags} {_FORCE_DEVICES_FLAG}={n}".strip()
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="JAX/Pallas hygiene analyzer (no-densify, jit-cache, "
-                    "donation-safety, pallas-purity, psum-axis)")
+        description="JAX/Pallas hygiene analyzer: AST rules (no-densify, "
+                    "jit-cache, donation-safety, pallas-purity, psum-axis) "
+                    "plus, with --ir, jaxpr-level passes (dense-blowup, "
+                    "peak-memory, collectives, pallas-tiles)")
     ap.add_argument("paths", nargs="*", default=["src"],
                     help="files or directories to analyze (default: src)")
     ap.add_argument("--format", choices=("text", "json"), default="text")
-    ap.add_argument("--out", default=None,
+    ap.add_argument("--out", "--output", dest="out", default=None,
                     help="write the report here instead of stdout")
     ap.add_argument("--rules", default=None,
                     help="comma-separated rule subset (default: all)")
     ap.add_argument("--list-rules", action="store_true",
-                    help="print the rule catalog and exit")
+                    help="print the rule and IR-pass catalogs and exit")
     ap.add_argument("--show-suppressed", action="store_true",
                     help="include suppressed findings in the text report")
+    ap.add_argument("--ir", action="store_true",
+                    help="also trace the engine entry points and run the "
+                         "IR passes (imports jax; forces 4 host devices "
+                         "when none are configured)")
+    ap.add_argument("--update-budgets", action="store_true",
+                    help="with --ir: rewrite analysis/ir_budgets.json from "
+                         "this run's planner measurements (re-baseline)")
     args = ap.parse_args(argv)
 
     registry = all_rules()
     if args.list_rules:
         for name, rule in sorted(registry.items()):
             print(f"{name}: {rule.description}")
+        # IR passes need no jax to *list* — the registry is declarative
+        from repro.analysis.ir.framework import all_ir_passes
+
+        for name, ir_pass in sorted(all_ir_passes().items()):
+            print(f"{name} (--ir): {ir_pass.description}")
         return 0
 
     rules = None
@@ -49,12 +86,37 @@ def main(argv=None) -> int:
             return 2
         rules = [registry[n] for n in names]
 
-    findings, errors = analyze_paths(args.paths, rules=rules)
+    if args.ir and "psum-axis" in registry:
+        # the IR collective checker verifies axes on the real meshes; the
+        # AST rule's no-vocabulary "unverifiable" fallback would be noise
+        registry["psum-axis"].defer_to_ir = True
+
+    timings = {}
+    findings, errors = analyze_paths(args.paths, rules=rules,
+                                     timings=timings)
+    extra = None
+    if args.ir:
+        _force_host_devices(4)
+        from repro.analysis.ir import run_ir
+
+        ir_result = run_ir(update_budgets=args.update_budgets,
+                           timings=timings)
+        findings = findings + ir_result.findings
+        errors = errors + ir_result.errors
+        extra = {"ir": {
+            "skipped_targets": ir_result.skipped_targets,
+            "skipped_checks": ir_result.skipped_checks,
+            "budgets_path": ir_result.budgets_path,
+            "budgets_written": ir_result.budgets_written,
+            "measured": ir_result.measured,
+        }}
+
     if args.format == "json":
-        report = render_json(findings, errors)
+        report = render_json(findings, errors, timings=timings, extra=extra)
     else:
         report = render_text(findings, errors,
-                             verbose_suppressed=args.show_suppressed)
+                             verbose_suppressed=args.show_suppressed,
+                             timings=timings)
     if args.out:
         with open(args.out, "w") as f:
             f.write(report + "\n")

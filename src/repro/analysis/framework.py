@@ -27,6 +27,7 @@ import ast
 import dataclasses
 import json
 import re
+import time
 from pathlib import Path
 from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
@@ -195,13 +196,19 @@ def _norm(path: str) -> str:
     return str(path).replace("\\", "/")
 
 
-def _run_rules_on(ctx: FileContext, rules: Sequence[Rule]) -> List[Finding]:
+def _run_rules_on(ctx: FileContext, rules: Sequence[Rule],
+                  timings: Optional[Dict[str, float]] = None) -> List[Finding]:
     findings: List[Finding] = []
     known = {r.name for r in rules} | {SUPPRESSION_HYGIENE}
     for rule in rules:
         if not rule.applies_to(ctx.path):
             continue
-        for node, message in rule.check(ctx):
+        t0 = time.perf_counter()
+        checked = list(rule.check(ctx))
+        if timings is not None:
+            timings[rule.name] = timings.get(rule.name, 0.0) + \
+                (time.perf_counter() - t0)
+        for node, message in checked:
             line = getattr(node, "lineno", 1)
             col = getattr(node, "col_offset", 0)
             suppressed, reason = ctx.suppression_for(rule.name, line)
@@ -255,9 +262,12 @@ def iter_py_files(paths: Sequence[str]) -> Iterator[Path]:
 
 def analyze_paths(paths: Sequence[str],
                   rules: Optional[Sequence[Rule]] = None,
+                  timings: Optional[Dict[str, float]] = None,
                   ) -> Tuple[List[Finding], List[str]]:
     """Analyze every ``*.py`` under ``paths``.  Returns (findings, errors);
-    errors are unreadable/unparseable files (reported, exit code 2)."""
+    errors are unreadable/unparseable files (reported, exit code 2).
+    ``timings``, when given, accumulates per-rule wall seconds (including
+    each rule's ``begin_run``) so slow rules are visible in the reports."""
     if rules is None:
         rules = list(all_rules().values())
     contexts: List[FileContext] = []
@@ -268,10 +278,14 @@ def analyze_paths(paths: Sequence[str],
         except (OSError, SyntaxError, ValueError) as e:
             errors.append(f"{fp}: {type(e).__name__}: {e}")
     for rule in rules:
+        t0 = time.perf_counter()
         rule.begin_run(contexts)
+        if timings is not None:
+            timings[rule.name] = timings.get(rule.name, 0.0) + \
+                (time.perf_counter() - t0)
     findings: List[Finding] = []
     for ctx in contexts:
-        findings.extend(_run_rules_on(ctx, rules))
+        findings.extend(_run_rules_on(ctx, rules, timings=timings))
     findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
     return findings, errors
 
@@ -281,7 +295,8 @@ def analyze_paths(paths: Sequence[str],
 # ---------------------------------------------------------------------------
 
 def render_text(findings: Sequence[Finding], errors: Sequence[str] = (),
-                verbose_suppressed: bool = False) -> str:
+                verbose_suppressed: bool = False,
+                timings: Optional[Dict[str, float]] = None) -> str:
     out: List[str] = []
     active = [f for f in findings if not f.suppressed]
     suppressed = [f for f in findings if f.suppressed]
@@ -293,16 +308,22 @@ def render_text(findings: Sequence[Finding], errors: Sequence[str] = (),
                        f"({f.reason}): {f.message}")
     for e in errors:
         out.append(f"error: {e}")
+    if timings:
+        total = sum(timings.values())
+        parts = ", ".join(f"{name} {secs * 1000:.0f}ms" for name, secs in
+                          sorted(timings.items(), key=lambda kv: -kv[1]))
+        out.append(f"timing: {total:.2f}s total ({parts})")
     out.append(
         f"{len(active)} finding(s), {len(suppressed)} suppressed, "
         f"{len(errors)} error(s)")
     return "\n".join(out)
 
 
-def render_json(findings: Sequence[Finding], errors: Sequence[str] = ()
-                ) -> str:
+def render_json(findings: Sequence[Finding], errors: Sequence[str] = (),
+                timings: Optional[Dict[str, float]] = None,
+                extra: Optional[Dict] = None) -> str:
     active = [f for f in findings if not f.suppressed]
-    return json.dumps({
+    report = {
         "findings": [f.to_dict() for f in findings],
         "errors": list(errors),
         "summary": {
@@ -311,4 +332,10 @@ def render_json(findings: Sequence[Finding], errors: Sequence[str] = ()
             "errors": len(errors),
             "ok": not active and not errors,
         },
-    }, indent=1)
+    }
+    if timings is not None:
+        report["timings_seconds"] = {
+            k: round(v, 4) for k, v in sorted(timings.items())}
+    if extra:
+        report.update(extra)
+    return json.dumps(report, indent=1)

@@ -1,0 +1,33 @@
+"""jaxpr-level (IR) analysis: trace the engines abstractly, verify the
+paper's memory/sharding/tiling story on what they actually lower to.
+
+Importing this package requires jax; the AST half of ``repro.analysis``
+stays stdlib-only, so the CLI imports this lazily behind ``--ir``.
+"""
+from repro.analysis.ir.framework import (  # noqa: F401
+    DEFAULT_BUDGETS_PATH,
+    DEFAULT_WAIVERS_PATH,
+    HEADROOM,
+    IRContext,
+    IRPass,
+    IRRunResult,
+    IRTarget,
+    TRACE_PASS,
+    all_ir_passes,
+    load_waivers,
+    register_ir_pass,
+    run_ir,
+)
+from repro.analysis.ir.liveness import (  # noqa: F401
+    PeakReport,
+    aval_bytes,
+    intermediate_avals,
+    iter_eqns,
+    peak_live_bytes,
+)
+from repro.analysis.ir.targets import (  # noqa: F401
+    CANON,
+    MESH_SHAPES,
+    UNSUPPORTED_PAIRS,
+    default_targets,
+)

@@ -1,0 +1,373 @@
+"""IR-pass framework: verify invariants on the jaxprs the engines run.
+
+PR 6's AST rules prove what the *source* says; these passes prove what the
+*lowered computation* does.  Each registered engine entry point is traced
+with abstract values only (:class:`IRTarget` — no data, no devices beyond
+forced-host meshes) and the registered :class:`IRPass`\\ es walk the closed
+jaxpr: the dense-blowup detector and peak-memory planner use the liveness
+analysis (:mod:`repro.analysis.ir.liveness`), the collective checker walks
+``shard_map`` bodies, and the Pallas tile auditor reads ``pallas_call``
+grid mappings.
+
+The machinery deliberately mirrors the AST side (same :class:`Finding`
+records, same reporters, same CLI): passes register with
+``@register_ir_pass``; intentional violations are waived through a
+*pass-level waiver file* (``analysis/ir_waivers.json``) whose entries carry
+a mandatory reason — a reasonless or unknown-pass waiver is reported as
+``suppression-hygiene`` exactly like a bad ``# repro: allow[...]`` comment.
+Findings carry the pseudo-path ``ir://<target-name>`` so the text/JSON
+reporters and the 0/1/2 exit contract apply unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.framework import SUPPRESSION_HYGIENE, Finding
+
+__all__ = [
+    "IRTarget", "IRPass", "IRContext", "IRRunResult", "register_ir_pass",
+    "all_ir_passes", "run_ir", "load_waivers", "TRACE_PASS",
+    "DEFAULT_BUDGETS_PATH", "DEFAULT_WAIVERS_PATH",
+]
+
+#: pseudo-pass name for targets that fail to trace at all.  A trace failure
+#: is itself a verdict (an unbound psum axis raises here, for instance), so
+#: it is reported as a finding — waivable like any pass, not a crash.
+TRACE_PASS = "ir-trace"
+
+DEFAULT_BUDGETS_PATH = "analysis/ir_budgets.json"
+DEFAULT_WAIVERS_PATH = "analysis/ir_waivers.json"
+
+
+class TargetTraceError(RuntimeError):
+    """An IRTarget's trace thunk raised."""
+
+
+@dataclasses.dataclass
+class IRTarget:
+    """One abstractly-traceable entry point of the repo.
+
+    ``trace`` returns a ClosedJaxpr built from ShapeDtypeStructs only.
+    ``lower`` (optional) returns a ``jax.stages.Lowered`` for checks that
+    need the compiled executable (donation aliasing); lowering may
+    legitimately fail off-TPU for Pallas-bearing targets — those checks
+    are skipped, never faked.  ``operand_bytes`` is the declared sparse
+    operand footprint the blowup detector scales its threshold from.
+    """
+
+    name: str
+    kind: str                      # "engine" | "mesh" | "kernel"
+    trace: Callable[[], Any]
+    operand_bytes: int = 0
+    lower: Optional[Callable[[], Any]] = None
+    donate_argnums: Tuple[int, ...] = ()
+    requires_devices: int = 0
+    documented_vmem_bytes: Optional[int] = None
+    budget_key: Optional[str] = None   # ledger key; None = not budgeted
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    _jaxpr: Any = dataclasses.field(default=None, repr=False)
+    _lowered: Any = dataclasses.field(default=None, repr=False)
+    _lower_error: Optional[str] = dataclasses.field(default=None, repr=False)
+
+    def jaxpr(self):
+        if self._jaxpr is None:
+            try:
+                self._jaxpr = self.trace()
+            except Exception as e:  # the failure IS the analysis result
+                raise TargetTraceError(
+                    f"{type(e).__name__}: {e}") from e
+        return self._jaxpr
+
+    def scope_jaxpr(self):
+        """The analysis scope: unwrap a single top-level ``pjit`` /
+        ``shard_map`` wrapper eqn so liveness sees the body — inside a
+        shard_map the avals are *per-device*, which is exactly the
+        peak-memory quantity the paper's story is about.  Returns
+        ``(jaxpr, mesh_axis_names | None)``."""
+        jaxpr = self.jaxpr()
+        mesh_axes = None
+        for _ in range(4):
+            raw = getattr(jaxpr, "jaxpr", jaxpr)
+            if len(raw.eqns) != 1:
+                break
+            eqn = raw.eqns[0]
+            if eqn.primitive.name in ("pjit", "closed_call", "core_call"):
+                jaxpr = eqn.params["jaxpr"]
+            elif eqn.primitive.name == "shard_map":
+                mesh = eqn.params.get("mesh")
+                if mesh is not None:
+                    mesh_axes = tuple(mesh.axis_names)
+                jaxpr = eqn.params["jaxpr"]
+            else:
+                break
+        return jaxpr, mesh_axes
+
+    def lowered(self):
+        """The Lowered stage, or None when the target has no lower thunk or
+        lowering fails on this platform (error recorded, check skipped)."""
+        if self.lower is None or self._lower_error is not None:
+            return self._lowered
+        if self._lowered is None:
+            try:
+                self._lowered = self.lower()
+            except Exception as e:
+                self._lower_error = f"{type(e).__name__}: {e}"
+        return self._lowered
+
+
+@dataclasses.dataclass
+class IRContext:
+    """Shared state the driver hands every pass invocation."""
+
+    budgets: Dict[str, Any]          # committed ledger (budgets file content)
+    measured: Dict[str, Dict]        # budget_key -> measured entry (filled
+    #                                  by the peak-memory pass)
+    update_budgets: bool = False
+    skipped_checks: List[str] = dataclasses.field(default_factory=list)
+
+    def note_skip(self, what: str) -> None:
+        self.skipped_checks.append(what)
+
+
+class IRPass:
+    """One named jaxpr-level invariant check.
+
+    Subclasses set ``name`` / ``description`` and implement
+    ``check(target, ctx) -> Iterable[str]`` (messages; location is the
+    target).  ``applies_to(target)`` scopes the pass by target kind.
+    """
+
+    name: str = ""
+    description: str = ""
+
+    def applies_to(self, target: IRTarget) -> bool:
+        return True
+
+    def check(self, target: IRTarget, ctx: IRContext) -> Iterable[str]:
+        raise NotImplementedError
+
+
+_IR_PASSES: Dict[str, IRPass] = {}
+
+
+def register_ir_pass(cls):
+    """Class decorator adding a pass (by instance) to the registry."""
+    inst = cls()
+    if not inst.name:
+        raise ValueError(f"IR pass {cls.__name__} has no name")
+    if inst.name in _IR_PASSES:
+        raise ValueError(f"duplicate IR pass name {inst.name!r}")
+    _IR_PASSES[inst.name] = inst
+    return cls
+
+
+def all_ir_passes() -> Dict[str, IRPass]:
+    from repro.analysis.ir import passes as _passes  # noqa: F401
+
+    return dict(_IR_PASSES)
+
+
+# ---------------------------------------------------------------------------
+# Waivers: the pass-level ledger, same semantics as ``# repro: allow[...]``
+# ---------------------------------------------------------------------------
+
+def load_waivers(path) -> Tuple[List[Dict], List[Finding]]:
+    """Read the waiver file.  Returns (waivers, hygiene findings) — a
+    waiver without a reason, or naming an unknown pass, is reported as
+    ``suppression-hygiene`` (unsuppressable), mirroring the AST ledger."""
+    p = Path(path)
+    if not p.exists():
+        return [], []
+    try:
+        data = json.loads(p.read_text())
+    except ValueError as e:
+        return [], [Finding(
+            SUPPRESSION_HYGIENE, str(path), 1, 0,
+            f"unreadable IR waiver ledger ({e}) — every waiver entry needs "
+            "{pass, target, reason}")]
+    entries = data.get("waivers", data) if isinstance(data, dict) else data
+    known = set(all_ir_passes()) | {TRACE_PASS}
+    waivers, hygiene = [], []
+    for i, w in enumerate(entries):
+        pass_name = w.get("pass", "")
+        reason = (w.get("reason") or "").strip()
+        if not reason:
+            hygiene.append(Finding(
+                SUPPRESSION_HYGIENE, str(path), i + 1, 0,
+                f"IR waiver of [{pass_name}] for {w.get('target', '*')!r} "
+                "carries no reason — every waiver must explain itself"))
+            continue
+        if pass_name not in known:
+            hygiene.append(Finding(
+                SUPPRESSION_HYGIENE, str(path), i + 1, 0,
+                f"IR waiver names unknown pass [{pass_name}]"))
+            continue
+        waivers.append(w)
+    return waivers, hygiene
+
+
+def _waive(finding: Finding, waivers: Sequence[Dict]) -> Finding:
+    target = finding.path[len("ir://"):] if finding.path.startswith("ir://") \
+        else finding.path
+    for w in waivers:
+        if w["pass"] != finding.rule:
+            continue
+        if fnmatch.fnmatchcase(target, w.get("target", "*")):
+            return dataclasses.replace(
+                finding, suppressed=True, reason=w["reason"])
+    return finding
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IRRunResult:
+    findings: List[Finding]
+    errors: List[str]
+    skipped_targets: List[Dict]      # [{target, reason}]
+    skipped_checks: List[str]
+    measured: Dict[str, Dict]        # budget_key -> measured ledger entry
+    budgets_path: str
+    budgets_written: bool = False
+
+
+def _finding(pass_name: str, target: IRTarget, message: str) -> Finding:
+    return Finding(pass_name, f"ir://{target.name}", 0, 0, message)
+
+
+def run_ir(targets: Optional[Sequence[IRTarget]] = None,
+           passes: Optional[Sequence[IRPass]] = None,
+           budgets_path: str = DEFAULT_BUDGETS_PATH,
+           waivers_path: str = DEFAULT_WAIVERS_PATH,
+           update_budgets: bool = False,
+           timings: Optional[Dict[str, float]] = None) -> IRRunResult:
+    """Trace every target and run every registered IR pass over it.
+
+    Mirrors :func:`repro.analysis.framework.analyze_paths`: returns findings
+    (waived ones marked suppressed-with-reason) and infra errors.  Targets
+    needing more devices than exist are *skipped* (recorded, never silently
+    dropped); with ``update_budgets`` the measured peak-memory ledger is
+    written to ``budgets_path`` after the run.
+    """
+    import jax
+
+    if targets is None:
+        from repro.analysis.ir.targets import default_targets
+
+        targets = default_targets()
+    if passes is None:
+        passes = list(all_ir_passes().values())
+    waivers, findings = load_waivers(waivers_path)
+    errors: List[str] = []
+    skipped: List[Dict] = []
+
+    budgets: Dict[str, Any] = {}
+    bp = Path(budgets_path)
+    if bp.exists():
+        try:
+            budgets = json.loads(bp.read_text())
+        except ValueError as e:
+            errors.append(f"{budgets_path}: unreadable budget ledger: {e}")
+
+    n_devices = len(jax.devices())
+    traced: List[IRTarget] = []
+    for t in targets:
+        if t.requires_devices > n_devices:
+            skipped.append({"target": t.name,
+                            "reason": f"needs {t.requires_devices} devices, "
+                                      f"have {n_devices}"})
+            continue
+        t0 = time.perf_counter()
+        try:
+            t.jaxpr()
+            traced.append(t)
+        except TargetTraceError as e:
+            findings.append(_finding(
+                TRACE_PASS, t,
+                f"entry point failed to trace abstractly: {e} — the IR "
+                "passes cannot verify what they cannot trace"))
+        if timings is not None:
+            timings["trace"] = timings.get("trace", 0.0) + \
+                (time.perf_counter() - t0)
+
+    ctx = IRContext(budgets=budgets, measured={},
+                    update_budgets=update_budgets)
+    for ir_pass in passes:
+        t0 = time.perf_counter()
+        for target in traced:
+            if not ir_pass.applies_to(target):
+                continue
+            try:
+                for message in ir_pass.check(target, ctx):
+                    findings.append(_finding(ir_pass.name, target, message))
+            except Exception as e:
+                errors.append(
+                    f"ir://{target.name}: pass {ir_pass.name} crashed: "
+                    f"{type(e).__name__}: {e}")
+        if timings is not None:
+            timings[f"ir:{ir_pass.name}"] = time.perf_counter() - t0
+
+    # stale-ledger guard: a committed budget whose target vanished (and was
+    # not merely skipped for lack of devices) would silently stop gating
+    skipped_names = {s["target"] for s in skipped}
+    budgeted = {t.budget_key for t in traced if t.budget_key}
+    skipped_keys = {t.budget_key for t in targets
+                    if t.budget_key and t.name in skipped_names}
+    for key in budgets.get("budgets", {}):
+        if key not in budgeted and key not in skipped_keys:
+            findings.append(Finding(
+                "peak-memory", f"ir://{key}", 0, 0,
+                f"budget ledger entry {key!r} matches no traced target — "
+                "delete it or restore the entry point "
+                "(re-baseline with --ir --update-budgets)"))
+
+    findings = [_waive(f, waivers) for f in findings]
+    findings.sort(key=lambda f: (f.path, f.rule, f.message))
+
+    result = IRRunResult(findings=findings, errors=errors,
+                         skipped_targets=skipped,
+                         skipped_checks=ctx.skipped_checks,
+                         measured=ctx.measured, budgets_path=str(budgets_path))
+    if update_budgets:
+        _write_budgets(result, targets, budgets)
+    return result
+
+
+def _write_budgets(result: IRRunResult, targets: Sequence[IRTarget],
+                   old: Dict) -> None:
+    from repro.analysis.ir.targets import CANON, UNSUPPORTED_PAIRS
+
+    skipped_names = {s["target"] for s in result.skipped_targets}
+    budgets = dict(old.get("budgets", {}))
+    budgets.update(result.measured)
+    # keep old entries for targets skipped on this machine; drop the rest
+    live_keys = set(result.measured) | {
+        t.budget_key for t in targets
+        if t.budget_key and t.name in skipped_names}
+    budgets = {k: v for k, v in sorted(budgets.items()) if k in live_keys}
+    ledger = {
+        "_comment": "Committed per-(solver, backend, mesh) peak-memory "
+                    "budgets from the IR liveness planner over the "
+                    "canonical trace shapes.  Re-baseline intentionally "
+                    "with: python -m repro.analysis --ir --update-budgets",
+        "config": dict(CANON, headroom=HEADROOM),
+        "unsupported": UNSUPPORTED_PAIRS,
+        "budgets": budgets,
+    }
+    Path(result.budgets_path).parent.mkdir(parents=True, exist_ok=True)
+    Path(result.budgets_path).write_text(json.dumps(ledger, indent=1) + "\n")
+    result.budgets_written = True
+
+
+#: measured peak may exceed the committed budget by this factor before the
+#: gate fails — absorbs jax-version jitter in jaxpr construction while still
+#: catching any real densification (which is a many-x regression)
+HEADROOM = 1.10

@@ -1,0 +1,8 @@
+"""Registered IR passes.  Importing this package populates the registry —
+:func:`repro.analysis.ir.framework.all_ir_passes` does so lazily."""
+from repro.analysis.ir.passes import (  # noqa: F401
+    collectives,
+    dense_blowup,
+    pallas_tiles,
+    peak_memory,
+)

@@ -1,0 +1,73 @@
+"""IR pass: no intermediate may blow up dense.
+
+The AST ``no-densify`` rule bans the *spellings* of densification
+(``.todense()`` and friends); this pass bans the *fact* of it, through any
+API surface: walk every eqn output in the target's scope jaxpr (per-device
+scope for mesh targets) and flag any abstract value whose bytes exceed
+``blowup_multiplier`` times the declared sparse-operand footprint.  A
+stray ``bsr_to_coo``-then-scatter round trip, a gather that materializes
+(n, m), a mask built at full operand shape — all land here even though no
+banned name appears in the source.
+
+The canonical shapes in :data:`repro.analysis.ir.targets.CANON` are chosen
+so every legitimate intermediate sits well under the threshold (largest:
+the padded-CSR gather at 2x the operand) while a dense (n, m) temporary
+sits far above it on every backend and mesh shape (6.9x at the tightest,
+the 2x2 CSR shard).
+"""
+from __future__ import annotations
+
+from repro.analysis.ir.framework import IRContext, IRPass, IRTarget, \
+    register_ir_pass
+from repro.analysis.ir.liveness import aval_bytes, eqn_source, \
+    intermediate_avals
+
+#: eqn outputs below this many bytes are never interesting, whatever the
+#: ratio — keeps tiny-operand targets (gram: an 8 KiB factor slab) from
+#: flagging their own padding
+_MIN_BYTES = 1 << 16
+
+
+@register_ir_pass
+class DenseBlowupPass(IRPass):
+    name = "dense-blowup"
+    description = ("flag intermediates larger than blowup_multiplier x the "
+                   "sparse-operand footprint (densification through any API)")
+
+    def applies_to(self, target: IRTarget) -> bool:
+        # kernels legitimately take *dense* factor slabs (gram, the fused
+        # epilogue) and pad them to lane multiples; densification is a
+        # property of solver steps over sparse operands
+        return target.kind != "kernel"
+
+    def check(self, target: IRTarget, ctx: IRContext):
+        from repro.analysis.ir.targets import CANON
+
+        multiplier = CANON["blowup_multiplier"]
+        scope, _ = target.scope_jaxpr()
+        footprint = target.operand_bytes
+        if footprint <= 0:
+            footprint = sum(
+                aval_bytes(v.aval)
+                for v in getattr(scope, "jaxpr", scope).invars)
+        if footprint <= 0:
+            ctx.note_skip(f"{target.name}: no operand footprint to scale "
+                          "the dense-blowup threshold from")
+            return
+        seen = set()
+        for aval, eqn, _depth in intermediate_avals(scope):
+            nbytes = aval_bytes(aval)
+            if nbytes < _MIN_BYTES or nbytes <= multiplier * footprint:
+                continue
+            key = (eqn.primitive.name, getattr(aval, "shape", None),
+                   str(getattr(aval, "dtype", "?")))
+            if key in seen:
+                continue
+            seen.add(key)
+            where = eqn_source(eqn)
+            yield (
+                f"dense blowup: `{eqn.primitive.name}` materializes "
+                f"{tuple(aval.shape)} {aval.dtype} = {nbytes} bytes, "
+                f"{nbytes / footprint:.1f}x the {footprint}-byte sparse "
+                f"operand footprint (threshold {multiplier:g}x)"
+                + (f" [{where}]" if where else ""))

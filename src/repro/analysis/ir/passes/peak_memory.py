@@ -1,0 +1,76 @@
+"""IR pass: per-target peak live bytes vs the committed budget ledger.
+
+The planner (:func:`repro.analysis.ir.liveness.peak_live_bytes`) walks the
+target's scope jaxpr (per-device scope for mesh targets) and computes the
+sequential-execution peak of live abstract-value bytes.  The number is
+deterministic — same jaxpr, same bytes, any machine — so it can be
+*committed*: ``analysis/ir_budgets.json`` holds one entry per target, and
+a change that densifies a hot path fails this pass even when every test
+still passes (a dense temporary is a many-x regression; the ledger's
+``headroom`` factor absorbs jax-version jitter only).
+
+Re-baseline intentionally with ``python -m repro.analysis --ir
+--update-budgets`` (which rewrites the ledger from this run's
+measurements) and commit the diff.  Where a compiled executable is
+available (CSR mesh targets on CPU) the pass also records XLA's own
+``memory_analysis()`` temp/argument bytes next to the plan, the same
+numbers ``repro.analysis.runtime.memory_guard`` reads at runtime.
+"""
+from __future__ import annotations
+
+from repro.analysis.ir.framework import HEADROOM, IRContext, IRPass, \
+    IRTarget, register_ir_pass
+from repro.analysis.ir.liveness import peak_live_bytes
+
+
+@register_ir_pass
+class PeakMemoryPass(IRPass):
+    name = "peak-memory"
+    description = ("liveness-planner peak bytes per target, gated against "
+                   "the committed analysis/ir_budgets.json ledger")
+
+    def check(self, target: IRTarget, ctx: IRContext):
+        if target.budget_key is None:
+            return
+        report = peak_live_bytes(target.scope_jaxpr()[0])
+        entry = {
+            "peak_bytes": report.peak_bytes,
+            "input_bytes": report.input_bytes,
+            "output_bytes": report.output_bytes,
+            "peak_eqn": report.peak_eqn,
+            "peak_source": report.peak_source,
+        }
+        compiled = target.lowered()
+        if compiled is not None:
+            try:
+                ma = compiled.memory_analysis()
+                entry["xla_temp_bytes"] = int(ma.temp_size_in_bytes)
+                entry["xla_argument_bytes"] = int(ma.argument_size_in_bytes)
+                entry["xla_output_bytes"] = int(ma.output_size_in_bytes)
+            except Exception:
+                ctx.note_skip(f"{target.name}: compiled executable exposes "
+                              "no memory_analysis() on this platform")
+        elif target.lower is not None:
+            ctx.note_skip(f"{target.name}: XLA memory cross-check skipped "
+                          f"(lowering failed: {target._lower_error})")
+        ctx.measured[target.budget_key] = entry
+
+        if ctx.update_budgets:  # re-baselining: measure, don't gate
+            return
+        committed = ctx.budgets.get("budgets", {}).get(target.budget_key)
+        if committed is None:
+            yield (f"no committed peak-memory budget for this target in the "
+                   f"ledger — run `python -m repro.analysis --ir "
+                   f"--update-budgets` and commit analysis/ir_budgets.json")
+            return
+        headroom = float(ctx.budgets.get("config", {}).get(
+            "headroom", HEADROOM))
+        limit = int(committed["peak_bytes"] * headroom)
+        if report.peak_bytes > limit:
+            src = f" at {report.peak_source}" if report.peak_source else ""
+            yield (
+                f"peak-memory regression: planner peak {report.peak_bytes} "
+                f"bytes exceeds committed budget {committed['peak_bytes']} "
+                f"(x{headroom:g} headroom = {limit}); peak eqn "
+                f"`{report.peak_eqn}`{src} — fix the densification or "
+                f"re-baseline deliberately with --ir --update-budgets")

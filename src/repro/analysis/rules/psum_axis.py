@@ -13,8 +13,15 @@ in assignments to names later passed into those calls.  ``check`` then
 flags any *string literal* axis argument of a collective
 (``psum``/``all_gather``/``pmean``/...) outside the vocabulary.  Axis
 names passed as variables are out of scope (the engine threads
-``rows_axes``/``cols_axis`` values, which this rule cannot resolve), and
-the rule stays silent when no mesh declaration is visible at all.
+``rows_axes``/``cols_axis`` values, which this rule cannot resolve).
+
+When no mesh declaration is visible at all the rule cannot tell a typo
+from a fine axis name — so instead of passing silently it reports each
+string-literal collective axis as *unverifiable* (suppressible like any
+finding), unless the IR collective checker is also running
+(``defer_to_ir``, set by the CLI's ``--ir`` mode), which verifies the
+axes against the actual shard_map meshes on the traced jaxprs and makes
+the AST-side guess redundant.
 """
 from __future__ import annotations
 
@@ -70,6 +77,10 @@ class PsumAxis(Rule):
 
     def __init__(self):
         self._declared: Set[str] = set()
+        #: set by the CLI when the IR collective checker runs in the same
+        #: invocation — it verifies axes against the real shard_map meshes,
+        #: so the no-vocabulary "unverifiable" guess would be pure noise
+        self.defer_to_ir: bool = False
 
     def begin_run(self, contexts: Sequence[FileContext]) -> None:
         self._declared = set()
@@ -77,7 +88,8 @@ class PsumAxis(Rule):
             self._declared |= _harvest(ctx)
 
     def check(self, ctx: FileContext) -> Iterable[Tuple[ast.AST, str]]:
-        if not self._declared:
+        unverifiable = not self._declared
+        if unverifiable and self.defer_to_ir:
             return
         for node in ast.walk(ctx.tree):
             if not isinstance(node, ast.Call):
@@ -96,7 +108,15 @@ class PsumAxis(Rule):
             if axis_expr is None:
                 continue
             for name in string_constants(axis_expr):
-                if name not in self._declared:
+                if unverifiable:
+                    yield node, (
+                        f"unverifiable: {tail} over axis {name!r}, but the "
+                        "analyzed tree declares no Mesh to check it "
+                        "against — include the mesh module in the analyzed "
+                        "paths, run with --ir (the IR collective checker "
+                        "verifies axes on the traced jaxprs), or suppress "
+                        "with a reason")
+                elif name not in self._declared:
                     yield node, (
                         f"{tail} over axis {name!r}, which no analyzed "
                         f"Mesh declares (known axes: "

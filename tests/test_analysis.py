@@ -251,9 +251,26 @@ def test_psum_axis_catches_typo_against_declared_mesh():
     assert any("'mdoel'" in m for m in msgs)
 
 
-def test_psum_axis_silent_without_mesh_declaration():
+def test_psum_axis_unverifiable_without_mesh_declaration():
+    # no Mesh in the analyzed tree: the rule can't tell a typo from a fine
+    # name, so it says so instead of passing silently
     src = "import jax\ndef f(x):\n    return jax.lax.psum(x, 'anything')\n"
-    assert not active(analyze_source(src, path=COLD), "psum-axis")
+    (f,) = active(analyze_source(src, path=COLD), "psum-axis")
+    assert "unverifiable" in f.message and "'anything'" in f.message
+
+
+def test_psum_axis_defers_to_ir_checker():
+    # when the IR collective checker runs in the same invocation (--ir),
+    # the no-vocabulary guess is redundant noise and is withheld
+    from repro.analysis.framework import all_rules
+
+    rule = all_rules()["psum-axis"]
+    src = "import jax\ndef f(x):\n    return jax.lax.psum(x, 'anything')\n"
+    rule.defer_to_ir = True
+    try:
+        assert not active(analyze_source(src, path=COLD), "psum-axis")
+    finally:
+        rule.defer_to_ir = False
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,432 @@
+"""IR analyzer suite (``repro.analysis.ir``): every seeded regression must
+flag (the CLI would exit 1) and the repo's own entry points must gate
+clean (exit 0).
+
+Seeded regressions, each through a custom :class:`IRTarget` so the defect
+is isolated from the real engines: a densifying edit (``jnp.outer`` on a
+sparse-values operand), an illegal Pallas BlockSpec (non-dividing block,
+off-tile minor dims, a VMEM-busting block), a donation XLA refuses to
+honor, a wrong/unbound psum axis under a real 2x2 forced-host mesh
+(subprocess, like tests/test_sharded_engine.py), and budget-ledger
+tampering.  The repo-wide gate runs the actual CLI (``--ir``) in a
+subprocess at the end.
+"""
+import functools
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.ir import (
+    IRTarget, TRACE_PASS, load_waivers, peak_live_bytes, run_ir,
+)
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SRC = os.path.join(REPO, "src")
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def exit_code(result):
+    """The CLI's 0/1/2 contract applied to an IRRunResult."""
+    if result.errors:
+        return 2
+    return 1 if any(not f.suppressed for f in result.findings) else 0
+
+
+def _run(targets, tmp_path, **kw):
+    """run_ir against throwaway ledgers so the repo's own are untouched."""
+    return run_ir(targets=targets,
+                  budgets_path=str(tmp_path / "budgets.json"),
+                  waivers_path=str(tmp_path / "waivers.json"), **kw)
+
+
+def active(result, rule=None):
+    return [f for f in result.findings
+            if not f.suppressed and (rule is None or f.rule == rule)]
+
+
+# ---------------------------------------------------------------------------
+# dense-blowup: a densifying edit is caught from the jaxpr, not the source
+# ---------------------------------------------------------------------------
+
+def _densifying_target():
+    def f(values):  # 16 KiB of "sparse values"...
+        dense = jnp.outer(values, values)  # ...blown up to a 64 MiB matrix
+        return dense.sum()
+
+    return IRTarget(name="fixture:densify", kind="engine",
+                    trace=lambda: jax.make_jaxpr(f)(_sds((4096,))),
+                    operand_bytes=4096 * 4)
+
+
+def test_dense_blowup_flags_densifying_edit(tmp_path):
+    result = _run([_densifying_target()], tmp_path)
+    (f,) = active(result, "dense-blowup")
+    assert f.path == "ir://fixture:densify"
+    assert "4096.0x" in f.message or "dense blowup" in f.message
+    assert exit_code(result) == 1
+
+
+def test_dense_blowup_passes_well_behaved_code(tmp_path):
+    def f(values):
+        return (values * 2.0).sum()
+
+    t = IRTarget(name="fixture:clean", kind="engine",
+                 trace=lambda: jax.make_jaxpr(f)(_sds((4096,))),
+                 operand_bytes=4096 * 4)
+    result = _run([t], tmp_path)
+    assert exit_code(result) == 0, [f.message for f in active(result)]
+
+
+# ---------------------------------------------------------------------------
+# pallas-tiles: illegal BlockSpecs caught from the traced grid mapping
+# ---------------------------------------------------------------------------
+
+def _pallas_target(name, call, operand):
+    return IRTarget(name=name, kind="kernel",
+                    trace=lambda: jax.make_jaxpr(call)(operand))
+
+
+def test_pallas_tiles_flags_illegal_blockspec(tmp_path):
+    import jax.experimental.pallas as pl
+
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2
+
+    def call(x):  # (150, 100) blocks: minor dim off-lane, second-minor
+        return pl.pallas_call(  # off-sublane, neither the full extent
+            kern, grid=(2,),
+            in_specs=[pl.BlockSpec((150, 100), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((150, 100), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((300, 200), jnp.float32),
+        )(x)
+
+    result = _run([_pallas_target("fixture:bad-tiles", call,
+                                  _sds((300, 200)))], tmp_path)
+    msgs = [f.message for f in active(result, "pallas-tiles")]
+    assert any("minor block dim 100" in m for m in msgs), msgs
+    assert any("second-minor" in m for m in msgs), msgs
+    assert exit_code(result) == 1
+
+
+def test_pallas_tiles_flags_non_dividing_block(tmp_path):
+    import jax.experimental.pallas as pl
+
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2
+
+    def call(x):  # 64 does not divide 300: last grid step reads a partial
+        return pl.pallas_call(
+            kern, grid=(5,),
+            in_specs=[pl.BlockSpec((64, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((64, 128), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((300, 128), jnp.float32),
+        )(x)
+
+    result = _run([_pallas_target("fixture:ragged", call,
+                                  _sds((300, 128)))], tmp_path)
+    msgs = [f.message for f in active(result, "pallas-tiles")]
+    assert any("does not divide" in m for m in msgs), msgs
+    assert exit_code(result) == 1
+
+
+def test_pallas_tiles_flags_vmem_busting_block(tmp_path):
+    import jax.experimental.pallas as pl
+
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2
+
+    def call(x):  # whole-array blocks: 2 x 32 MiB working set >> 16 MiB
+        return pl.pallas_call(
+            kern, out_shape=jax.ShapeDtypeStruct((4096, 1024), jnp.float32),
+        )(x)
+
+    result = _run([_pallas_target("fixture:vmem-bomb", call,
+                                  _sds((4096, 1024)))], tmp_path)
+    msgs = [f.message for f in active(result, "pallas-tiles")]
+    assert any("VMEM" in m for m in msgs), msgs
+    assert exit_code(result) == 1
+
+
+def test_pallas_tiles_checks_documented_working_set(tmp_path):
+    import jax.experimental.pallas as pl
+
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2
+
+    def call(x):
+        return pl.pallas_call(
+            kern, out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+        )(x)
+
+    t = IRTarget(name="fixture:doc-claim", kind="kernel",
+                 trace=lambda: jax.make_jaxpr(call)(_sds((8, 128))),
+                 documented_vmem_bytes=1 << 20)  # docstring claims 1 MiB
+    result = _run([t], tmp_path)
+    msgs = [f.message for f in active(result, "pallas-tiles")]
+    assert any("does not match the documented" in m for m in msgs), msgs
+
+
+# ---------------------------------------------------------------------------
+# collectives: axis checks + donation aliasing
+# ---------------------------------------------------------------------------
+
+def test_collective_outside_shard_map_is_flagged(tmp_path):
+    # axis_env lets the psum trace without any shard_map: structurally
+    # there is no mesh to reduce over, which is exactly the finding
+    def trace():
+        return jax.make_jaxpr(
+            lambda x: jax.lax.psum(x, "batch"),  # repro: allow[psum-axis] deliberate fixture: a collective with no mesh anywhere
+            axis_env=[("batch", 2)])(_sds((8, 8)))
+
+    t = IRTarget(name="fixture:naked-psum", kind="engine", trace=trace)
+    result = _run([t], tmp_path)
+    (f,) = active(result, "collectives")
+    assert "outside any shard_map" in f.message
+    assert exit_code(result) == 1
+
+
+def test_unbound_psum_axis_is_an_ir_trace_finding(tmp_path):
+    # a fully unbound axis name cannot even trace; the failure is the
+    # analysis result, reported as a waivable ir-trace finding, not a crash
+    def trace():
+        return jax.make_jaxpr(
+            lambda x: jax.lax.psum(x, "rows"))(_sds((8,)))  # repro: allow[psum-axis] deliberate fixture: the unbound axis IS the test
+
+    t = IRTarget(name="fixture:unbound-axis", kind="engine", trace=trace)
+    result = _run([t], tmp_path)
+    (f,) = active(result, TRACE_PASS)
+    assert "failed to trace" in f.message
+    assert exit_code(result) == 1
+
+
+def test_wrong_psum_axis_under_real_mesh_flags():
+    """Wrong-axis psum under a 2x2 forced-host mesh: shard_map itself
+    rejects the unbound name at trace time, and the driver turns that into
+    an ir-trace finding (exit 1) instead of crashing the analyzer; the
+    correct-axis control on the same mesh passes clean."""
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.analysis.ir import IRTarget, run_ir, TRACE_PASS
+
+        mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                    ("data", "model"))
+        sds = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+
+        def target(name, axis):
+            fn = shard_map(lambda x: jax.lax.psum(x, axis), mesh=mesh,
+                           in_specs=P("data", "model"), out_specs=P(),
+                           check_rep=False)
+            return IRTarget(name=name, kind="mesh",
+                            trace=lambda: jax.make_jaxpr(fn)(sds),
+                            requires_devices=4)
+
+        res = run_ir(targets=[target("fixture:good-axis", "data"),
+                              target("fixture:bad-axis", "rows")],
+                     budgets_path="/tmp/_ir_b.json",
+                     waivers_path="/tmp/_ir_w.json")
+        out = {"errors": res.errors,
+               "active": [[f.rule, f.path, f.message[:80]]
+                          for f in res.findings if not f.suppressed]}
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    report = json.loads(out.stdout.strip().splitlines()[-1])
+    assert report["errors"] == []
+    rules_by_target = {path: rule for rule, path, _ in report["active"]}
+    assert "ir://fixture:good-axis" not in rules_by_target
+    assert rules_by_target.get("ir://fixture:bad-axis") in (
+        TRACE_PASS, "collectives")
+
+
+def _donation_target(name, fn, args, donate):
+    jitted = jax.jit(fn, donate_argnums=donate)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        trace = jax.make_jaxpr(fn)(*args)
+    return IRTarget(
+        name=name, kind="engine", trace=lambda: trace,
+        lower=lambda: jitted.lower(*args).compile(), donate_argnums=donate)
+
+
+def test_refused_donation_is_flagged(tmp_path):
+    # the donated buffer is never used, so XLA silently drops the alias —
+    # exactly the hidden double buffer the check exists to make loud
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # jax warns about the dead donation
+        t = _donation_target("fixture:refused-donation",
+                             lambda big, small: small * 2.0,
+                             (_sds((64, 64)), _sds((64, 64))), (0,))
+        result = _run([t], tmp_path)
+    (f,) = active(result, "collectives")
+    assert "not aliased" in f.message
+    assert exit_code(result) == 1
+
+
+def test_honored_donation_passes(tmp_path):
+    t = _donation_target("fixture:good-donation", lambda x: x + 1.0,
+                         (_sds((64, 64)),), (0,))
+    result = _run([t], tmp_path)
+    assert exit_code(result) == 0, [f.message for f in active(result)]
+
+
+# ---------------------------------------------------------------------------
+# peak-memory: the planner and the committed budget ledger
+# ---------------------------------------------------------------------------
+
+def test_peak_live_bytes_on_a_known_jaxpr():
+    closed = jax.make_jaxpr(lambda x: x + 1.0)(_sds((8,)))
+    report = peak_live_bytes(closed)
+    # input (32 B) and output (32 B) both live at the add
+    assert report.peak_bytes == 64
+    assert report.input_bytes == 32
+
+
+def _budgeted_target(name="fixture:budgeted", width=4096):
+    def f(v):
+        return (v * 2.0 + 1.0).sum()
+
+    return IRTarget(name=name, kind="engine",
+                    trace=lambda: jax.make_jaxpr(f)(_sds((width,))),
+                    operand_bytes=width * 4, budget_key=name)
+
+
+def test_budget_lifecycle_baseline_gate_regress(tmp_path):
+    t = _budgeted_target()
+
+    # no ledger yet: the gate demands one (exit 1)
+    missing = _run([t], tmp_path)
+    assert any("no committed peak-memory budget" in f.message
+               for f in active(missing, "peak-memory"))
+    assert exit_code(missing) == 1
+
+    # re-baseline writes the ledger and does not gate
+    baseline = _run([t], tmp_path, update_budgets=True)
+    assert exit_code(baseline) == 0 and baseline.budgets_written
+    ledger = json.loads((tmp_path / "budgets.json").read_text())
+    assert "fixture:budgeted" in ledger["budgets"]
+
+    # gate now passes against the committed number
+    clean = _run([t], tmp_path)
+    assert exit_code(clean) == 0
+
+    # tamper the budget down: the same target is now a regression
+    ledger["budgets"]["fixture:budgeted"]["peak_bytes"] = 1
+    (tmp_path / "budgets.json").write_text(json.dumps(ledger))
+    regressed = _run([t], tmp_path)
+    (f,) = active(regressed, "peak-memory")
+    assert "peak-memory regression" in f.message
+    assert exit_code(regressed) == 1
+
+
+def test_stale_budget_entry_is_flagged(tmp_path):
+    (tmp_path / "budgets.json").write_text(json.dumps(
+        {"budgets": {"fixture:gone": {"peak_bytes": 123}}}))
+    result = _run([_budgeted_target()], tmp_path, update_budgets=True)
+    # update_budgets still reports the stale key, and drops it on rewrite
+    assert any("matches no traced target" in f.message
+               for f in active(result, "peak-memory"))
+    ledger = json.loads((tmp_path / "budgets.json").read_text())
+    assert "fixture:gone" not in ledger["budgets"]
+
+
+def test_device_skipped_target_keeps_its_budget(tmp_path):
+    t = _budgeted_target()
+    huge = _budgeted_target(name="fixture:needs-cluster")
+    huge.requires_devices = 10_000
+    (tmp_path / "budgets.json").write_text(json.dumps(
+        {"budgets": {"fixture:needs-cluster": {"peak_bytes": 123}}}))
+    result = _run([t, huge], tmp_path, update_budgets=True)
+    assert result.skipped_targets == [
+        {"target": "fixture:needs-cluster",
+         "reason": f"needs 10000 devices, have {len(jax.devices())}"}]
+    # a skipped target is not stale: its entry survives the rewrite
+    assert exit_code(result) == 0
+    ledger = json.loads((tmp_path / "budgets.json").read_text())
+    assert ledger["budgets"]["fixture:needs-cluster"]["peak_bytes"] == 123
+
+
+# ---------------------------------------------------------------------------
+# waivers: the IR-side suppression ledger
+# ---------------------------------------------------------------------------
+
+def test_waiver_with_reason_suppresses(tmp_path):
+    (tmp_path / "waivers.json").write_text(json.dumps({"waivers": [
+        {"pass": "dense-blowup", "target": "fixture:*",
+         "reason": "test fixture densifies on purpose"}]}))
+    result = _run([_densifying_target()], tmp_path)
+    assert exit_code(result) == 0
+    (f,) = [f for f in result.findings if f.rule == "dense-blowup"]
+    assert f.suppressed and f.reason == "test fixture densifies on purpose"
+
+
+def test_reasonless_waiver_is_void_and_flagged(tmp_path):
+    (tmp_path / "waivers.json").write_text(json.dumps({"waivers": [
+        {"pass": "dense-blowup", "target": "fixture:*", "reason": "  "}]}))
+    result = _run([_densifying_target()], tmp_path)
+    rules = sorted(f.rule for f in active(result))
+    assert rules == ["dense-blowup", "suppression-hygiene"]
+    assert exit_code(result) == 1
+
+
+def test_unknown_pass_waiver_is_flagged(tmp_path):
+    (tmp_path / "waivers.json").write_text(json.dumps({"waivers": [
+        {"pass": "no-such-pass", "target": "*", "reason": "stale"}]}))
+    waivers, hygiene = load_waivers(tmp_path / "waivers.json")
+    assert waivers == []
+    (f,) = hygiene
+    assert "no-such-pass" in f.message
+
+
+def test_malformed_waiver_ledger_is_a_finding_not_a_crash(tmp_path):
+    (tmp_path / "waivers.json").write_text("")
+    waivers, hygiene = load_waivers(tmp_path / "waivers.json")
+    assert waivers == []
+    (f,) = hygiene
+    assert "unreadable" in f.message
+
+
+# ---------------------------------------------------------------------------
+# the repo gate: the actual CLI over the actual entry points
+# ---------------------------------------------------------------------------
+
+def test_repo_ir_gate_is_clean():
+    """Acceptance: ``python -m repro.analysis --ir`` exits 0 on the repo
+    with the committed ledgers — every (solver, backend) pair and both
+    mesh shapes traced, budgeted, and in-contract."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)  # the CLI forces 4 host devices itself
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src", "--ir",
+         "--format", "json"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-2000:])
+    report = json.loads(out.stdout)
+    assert report["summary"]["ok"]
+    assert report["ir"]["skipped_targets"] == []
+    measured = report["ir"]["measured"]
+    for key in ("als[jnp-csr]", "als[jnp-dense]", "als[pallas-bsr]",
+                "sequential[jnp-csr]", "distributed[2x2,jnp-csr]",
+                "distributed[4x1,pallas-bsr]", "streaming[2x2,pallas-bsr]",
+                "kernel:bsr_spmm"):
+        assert key in measured, sorted(measured)
+    # the ledger on disk covers exactly what this run measured
+    with open(os.path.join(REPO, "analysis", "ir_budgets.json")) as fh:
+        ledger = json.load(fh)
+    assert set(ledger["budgets"]) == set(measured)
