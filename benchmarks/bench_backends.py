@@ -59,18 +59,34 @@ def bench(n: int, m: int, k: int, iters: int, density: float, seed: int = 0):
             "matmul_us": _timed(lambda vv: be.matmul(op, vv), v),
             "matmul_t_us": _timed(lambda uu: be.matmul_t(op, uu), u),
             "gram_us": _timed(be.gram, u),
+            # the fused half-step pair: one launch on pallas-bsr, separate
+            # matmul+gram calls on every other backend — so this column is
+            # directly the "fused beats separate" comparison
+            "matmul_with_gram_us": _timed(
+                lambda vv: be.matmul_with_gram(op, vv), v),
+            "matmul_t_with_gram_us": _timed(
+                lambda uu: be.matmul_t_with_gram(op, uu), u),
         }
-        if name == "pallas-bsr":
+        if name.startswith("pallas-bsr"):
             entry["nnz_blocks"] = int(
                 np.asarray((op.bsr.tiles != 0).any(axis=(2, 3))).sum())
             entry["interpret_mode"] = jax.default_backend() != "tpu"
-        if name in ("jnp-dense", "jnp-csr", "pallas-bsr"):
+        if name in ("jnp-dense", "jnp-csr", "pallas-bsr",
+                    "pallas-bsr-unfused"):
             cfg = NMFConfig(k=k, iters=iters, solver="enforced",
                             sparsity=Sparsity(t_u=max(n * k // 25, k)),
                             backend=name)
             t0 = time.perf_counter()
             model = EnforcedNMF(cfg).fit(op, u0=u0)
+            jax.block_until_ready(model.u_)
             entry["fit_s"] = time.perf_counter() - t0
+            # second fit hits the jit caches: step time without compile,
+            # the number compare.py gates on
+            t0 = time.perf_counter()
+            model = EnforcedNMF(cfg).fit(op, u0=u0)
+            jax.block_until_ready(model.u_)
+            entry["fit_warm_s"] = time.perf_counter() - t0
+            entry["step_warm_us"] = entry["fit_warm_s"] / iters * 1e6
             entry["final_error"] = model.result_.final_error
         results[name] = entry
     return results

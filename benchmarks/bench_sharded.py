@@ -124,8 +124,10 @@ def main(argv=None) -> int:
                          "shards execute in interpret mode)")
     ap.add_argument("--full", action="store_true",
                     help="large-synthetic corpus (paper Fig. 10 scale)")
-    ap.add_argument("--inners", default="jnp-csr,pallas-bsr",
-                    help="comma-separated inner per-shard backends to sweep")
+    ap.add_argument("--inners", default="jnp-csr,pallas-bsr,pallas-bsr-unfused",
+                    help="comma-separated inner per-shard backends to sweep "
+                         "(pallas-bsr-unfused is the separate-launch "
+                         "reference the fused half-step is gated against)")
     ap.add_argument("--out", default="BENCH_sharded.json")
     args = ap.parse_args(argv)
 

@@ -1,0 +1,164 @@
+"""Regression gate: diff a fresh BENCH_* run against the committed baseline.
+
+Wall-clock numbers are only comparable between like environments, so the
+gate has two tiers:
+
+* **structural checks** always run: same benchmark kind, every baseline
+  series still present in the fresh run, and the fused-vs-separate
+  ordering (``pallas-bsr`` step time <= ``pallas-bsr-unfused`` within
+  noise) — the relationship the fused half-step kernels exist to win.
+* **wall-clock gating** (fail on > ``--threshold`` step-time regression,
+  default 15%) runs only when the fresh run's platform, device kind, and
+  benchmark shape match the baseline's.  A CI runner comparing against a
+  TPU-committed baseline skips the timing gate instead of failing on
+  hardware it never claimed to match.
+
+    PYTHONPATH=src python benchmarks/bench_backends.py --smoke --out fresh.json
+    python benchmarks/compare.py --baseline BENCH_backends.json --fresh fresh.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Iterator, Tuple
+
+#: per-kind step-time series: (json-path-prefix, metric key); lower = better
+_METRICS = {
+    "backends": ("backends", "step_warm_us"),
+    "sharded": ("results", "per_iter_ms"),
+    "streaming": ("results", "stream_s"),
+}
+
+
+def detect_kind(payload: dict) -> str:
+    if "backends" in payload:
+        return "backends"
+    if "chunk_sizes" in payload:
+        return "streaming"
+    if "results" in payload:
+        return "sharded"
+    raise SystemExit("unrecognized benchmark payload")
+
+
+def _series(payload: dict, kind: str) -> Iterator[Tuple[str, float]]:
+    """Flat (series-name, step-time) pairs for one payload."""
+    root_key, metric = _METRICS[kind]
+    root = payload.get(root_key, {})
+    if kind == "streaming":
+        for mode, per_chunk in root.items():
+            for w, rec in per_chunk.items():
+                if metric in rec:
+                    yield f"{mode}/chunk{w}", float(rec[metric])
+    else:
+        for name, rec in root.items():
+            if metric in rec:
+                yield name, float(rec[metric])
+
+
+def comparable(baseline: dict, fresh: dict) -> Tuple[bool, str]:
+    """Whether wall-clock numbers from the two payloads may be compared."""
+    for key in ("device", "device_kind"):
+        if key in baseline or key in fresh:
+            if baseline.get(key) != fresh.get(key):
+                return False, (f"device mismatch: baseline "
+                               f"{baseline.get(key)!r} vs fresh "
+                               f"{fresh.get(key)!r}")
+            break
+    if baseline.get("platform") != fresh.get("platform"):
+        return False, (f"platform mismatch: baseline "
+                       f"{baseline.get('platform')!r} vs fresh "
+                       f"{fresh.get('platform')!r}")
+    if baseline.get("shape") != fresh.get("shape"):
+        return False, (f"shape mismatch: baseline {baseline.get('shape')} "
+                       f"vs fresh {fresh.get('shape')}")
+    return True, ""
+
+
+def check_fused_ordering(payload: dict, kind: str, slack: float) -> list:
+    """The fused pallas-bsr path must not be slower than the unfused
+    reference it replaces (within ``slack`` timing noise)."""
+    series: Dict[str, float] = dict(_series(payload, kind))
+    failures = []
+    for name, t in series.items():
+        if "pallas-bsr-unfused" not in name:
+            continue
+        fused_name = name.replace("pallas-bsr-unfused", "pallas-bsr")
+        t_fused = series.get(fused_name)
+        if t_fused is not None and t_fused > t * (1.0 + slack):
+            failures.append(
+                f"fused {fused_name} ({t_fused:.6g}) slower than unfused "
+                f"{name} ({t:.6g}) beyond {slack:.0%} noise")
+    return failures
+
+
+def compare(baseline: dict, fresh: dict, threshold: float,
+            slack: float) -> int:
+    kind_b, kind_f = detect_kind(baseline), detect_kind(fresh)
+    if kind_b != kind_f:
+        print(f"FAIL: benchmark kinds differ ({kind_b} vs {kind_f})",
+              file=sys.stderr)
+        return 1
+    kind = kind_b
+
+    failures = []
+    base_series = dict(_series(baseline, kind))
+    fresh_series = dict(_series(fresh, kind))
+    for name in base_series:
+        if name not in fresh_series:
+            failures.append(f"series {name!r} present in baseline but "
+                            f"missing from the fresh run")
+
+    failures += check_fused_ordering(fresh, kind, slack)
+
+    ok_to_time, why = comparable(baseline, fresh)
+    if not ok_to_time:
+        print(f"note: skipping wall-clock gate — {why}")
+    else:
+        for name, t_base in sorted(base_series.items()):
+            t_fresh = fresh_series.get(name)
+            if t_fresh is None:
+                continue
+            ratio = t_fresh / t_base if t_base > 0 else float("inf")
+            marker = ""
+            if ratio > 1.0 + threshold:
+                failures.append(
+                    f"{name}: step time regressed {ratio - 1.0:+.1%} "
+                    f"({t_base:.6g} -> {t_fresh:.6g}), gate is "
+                    f"{threshold:.0%}")
+                marker = "  <-- FAIL"
+            print(f"  {name}: {t_base:.6g} -> {t_fresh:.6g} "
+                  f"({ratio - 1.0:+.1%}){marker}")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print(f"OK: {kind} benchmark within {threshold:.0%} of baseline "
+          f"({len(base_series)} series)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff a fresh benchmark run against the committed "
+                    "baseline; fail on step-time regression")
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_*.json")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced benchmark json")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated step-time regression (default 0.15)")
+    ap.add_argument("--fused-slack", type=float, default=0.10,
+                    help="timing noise allowed in the fused<=unfused check")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    return compare(baseline, fresh, args.threshold, args.fused_slack)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -298,6 +298,21 @@ def _kernel_targets() -> List[IRTarget]:
         documented_vmem_bytes=3 * 128 * 128 * 4,
         budget_key="kernel:bsr_spmm"))
 
+    def trace_spmm_gram():
+        from repro.kernels.fused import bsr_spmm_gram
+
+        return jax.make_jaxpr(lambda a, u: bsr_spmm_gram(a, u))(bsr, u)
+
+    out.append(IRTarget(
+        name="kernel:bsr_spmm_gram", kind="kernel", trace=trace_spmm_gram,
+        operand_bytes=_nbytes(bsr, u),
+        # the fused.py docstring's working-set claim, now checked: bm*bk
+        # tile + bk*k U slab + bm*k acc (f32) plus the f32 k*k Gram
+        documented_vmem_bytes=(
+            (c["bm"] * c["bk"] + c["bk"] * c["k"] + c["bm"] * c["k"]) * 4
+            + c["k"] * c["k"] * 4),
+        budget_key="kernel:bsr_spmm_gram"))
+
     ug = _sds((c["n"], c["k"]))
 
     def trace_gram():

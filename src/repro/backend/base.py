@@ -77,6 +77,19 @@ class MatmulBackend(Protocol):
         ``reduce_u`` / ``reduce_v`` on top (identity on one device)."""
         ...
 
+    def matmul_with_gram(self, a, v: jax.Array):
+        """``(A @ V, V^T V)`` — the batch half-step's product pair.  Both
+        read V, so a backend that owns its kernels can compute them in one
+        sweep while V is resident (the fused Pallas path); the default is
+        the separate ``matmul`` + ``gram`` calls, bit-for-bit.  The Gram is
+        the *local* one — the engine still applies ``reduce_v``."""
+        ...
+
+    def matmul_t_with_gram(self, a, u: jax.Array):
+        """``(A^T @ U, U^T U)`` — the other half-step's pair; same fusion
+        contract as :meth:`matmul_with_gram`, local Gram."""
+        ...
+
     def reduce_u(self, x: jax.Array) -> jax.Array:
         """Sum ``x`` over U's shard axes (identity on one device)."""
         ...
@@ -129,6 +142,13 @@ class LocalExecution:
 
     def reduce_all(self, x):
         return x
+
+    def matmul_with_gram(self, a, v):
+        # separate-launch reference: backends with fused kernels override
+        return self.matmul(a, v), self.gram(v)
+
+    def matmul_t_with_gram(self, a, u):
+        return self.matmul_t(a, u), self.gram(u)
 
     def sqnorm(self, a):
         from repro.core.nmf import _sqnorm

@@ -142,6 +142,22 @@ class ShardedBackend:
     def gram(self, x: jax.Array) -> jax.Array:
         return self.inner.gram(x)
 
+    def matmul_with_gram(self, a: ShardView, v: jax.Array):
+        """Fused half-step pair on the local shard: the inner backend
+        computes (A_ij @ V_j, V_j^T V_j) in one sweep (one Pallas launch
+        for ``pallas-bsr``); only the product is psummed over the
+        contracted axis — the Gram stays local, exactly like :meth:`gram`,
+        and the engine reduces it with ``reduce_v``."""
+        y, g = self.inner.matmul_with_gram(a.fwd, v)
+        return jax.lax.psum(y, self.cols_axis), g
+
+    def matmul_t_with_gram(self, a: ShardView, u: jax.Array):
+        """Fused pair on the transposed orientation: forward fused product
+        on ``a.tsp`` (scatter-free), product psummed over the row axes,
+        Gram local for the engine's ``reduce_u``."""
+        y, g = self.inner.matmul_with_gram(a.tsp, u)
+        return jax.lax.psum(y, self.rows_axes), g
+
     # -- reduction hooks (the engine's bookkeeping becomes global) -----------
 
     def reduce_u(self, x: jax.Array) -> jax.Array:
@@ -229,15 +245,26 @@ class _BsrShardFormat:
     feeds them straight to the Pallas streaming-tile kernels.  The local
     logical block shape cannot be recovered from the padded tile arrays,
     so this format threads the global (n, m) through the jit-static
-    ``shape`` argument of the lowering shims."""
+    ``shape`` argument of the lowering shims.
+
+    ``backend_name`` picks which registered Pallas backend resolves the
+    ingest tile sizes (through its autotune-ledger ``tile_config``) — the
+    fused default and the separate-launch reference share the format."""
 
     needs_shape = True
+
+    def __init__(self, backend_name: str = "pallas-bsr"):
+        self.backend_name = backend_name
 
     def ingest(self, a, r: int, c: int) -> DistBSR:
         if isinstance(a, DistBSR):
             return a
-        be = get_backend("pallas-bsr")
-        return _dist.distribute_bsr(a, r, c, bm=be.bm, bk=be.bk)
+        be = get_backend(self.backend_name)
+        # per-*shard* shape bucket: each device's kernels see the local
+        # (n/r, m/c) block, so that is the shape the ledger keys on
+        tiles = be.tile_config(max(a.shape[0] // r, 1),
+                               max(a.shape[1] // c, 1))
+        return _dist.distribute_bsr(a, r, c, bm=tiles.bm, bk=tiles.bk)
 
     def leaves(self, dist: DistBSR):
         return dist.tiles, dist.block_cols, dist.tiles_t, dist.block_cols_t
@@ -272,6 +299,7 @@ class _BsrShardFormat:
 _SHARDABLE_INNER = {
     "jnp-csr": _CsrShardFormat(),
     "pallas-bsr": _BsrShardFormat(),
+    "pallas-bsr-unfused": _BsrShardFormat("pallas-bsr-unfused"),
 }
 
 

@@ -182,10 +182,16 @@ def als_nmf(
 
     def body(carry, _):
         u, _v, max_nnz = carry
-        v = solve_gram(be.reduce_u(be.gram(u)), be.matmul_t(a, u))
+        # each half-step's sparse product and Gram read the same factor, so
+        # they come from one backend hook: fused into a single kernel sweep
+        # on the Pallas path, separate matmul+gram calls (bit-for-bit the
+        # previous body) everywhere else
+        atu, gu = be.matmul_t_with_gram(a, u)
+        v = solve_gram(be.reduce_u(gu), atu)
         v = _epilogue(v, sparsify_v)
 
-        u_new = solve_gram(be.reduce_v(be.gram(v)), be.matmul(a, v))
+        av, gv = be.matmul_with_gram(a, v)
+        u_new = solve_gram(be.reduce_v(gv), av)
         u_new = _epilogue(u_new, sparsify_u)
 
         # relative residual R = ||U_i - U_{i-1}||_F / ||U_i||_F with the

@@ -66,7 +66,8 @@ def seed_online_stats(a: Matrix, v: jax.Array,
     how ``fit`` seeds ``partial_fit`` continuation (one extra backend spmm,
     ~1/(2*iters) of the fit, instead of pinning the corpus)."""
     be = _resolve(a, backend)
-    return OnlineStats(av=be.matmul(a, v), gv=be.reduce_v(be.gram(v)))
+    av, gv = be.matmul_with_gram(a, v)
+    return OnlineStats(av=av, gv=be.reduce_v(gv))
 
 
 @functools.partial(
@@ -104,10 +105,14 @@ def online_als_step(
 
     def body(carry, _):
         u, _v, _gv, _av = carry
-        v = solve_gram(be.reduce_u(be.gram(u)), be.matmul_t(a_chunk, u))
+        # fused half-step pairs, like the batch engine: one kernel sweep
+        # computes the chunk product and the Gram on the Pallas path
+        atu, gu = be.matmul_t_with_gram(a_chunk, u)
+        v = solve_gram(be.reduce_u(gu), atu)
         v = _epilogue(v, sparsify_v)
-        gv = forget * stats.gv + be.reduce_v(be.gram(v))
-        av = forget * stats.av + be.matmul(a_chunk, v)
+        av_c, gv_c = be.matmul_with_gram(a_chunk, v)
+        gv = forget * stats.gv + be.reduce_v(gv_c)
+        av = forget * stats.av + av_c
         u_new = solve_gram(gv, av)
         u_new = _epilogue(u_new, sparsify_u)
         return (u_new, v, gv, av), None

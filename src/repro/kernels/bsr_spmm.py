@@ -13,17 +13,41 @@ into the same output block, revisited k/kb times).  VMEM working set per
 step: bm*bk (tile) + bk*kb (U slab) + bm*kb (acc) floats; defaults
 (128,128,128) use 192 KiB — comfortably inside the ~16 MiB VMEM budget,
 leaving room for double buffering.
+
+``kb=None`` (the default) resolves through the autotune ledger
+(:func:`repro.kernels.autotune.resolve_tiles`) — per-(shape-bucket,
+device-kind) measured sizes, falling back to the audited 128 default.  The
+fused spmm+gram variant of this kernel lives in
+:mod:`repro.kernels.fused`; both share the padding/clamping helpers below.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.autotune import resolve_tiles
 from repro.kernels.bsr import BSR, BSROperand
+
+
+def pad_rows(u: jax.Array, bk: int) -> jax.Array:
+    """Zero-pad the dense operand's rows up to a block-column multiple, so
+    every scalar-prefetched block index addresses a full (bk, ...) slab."""
+    return jnp.pad(u, ((0, (-u.shape[0]) % bk), (0, 0)))
+
+
+def pad_operand(u: jax.Array, bk: int, kb: int):
+    """The shared pad + clamp step of the separate spmm kernels: rows up to
+    a bk multiple, columns up to a kb multiple, and the effective k block
+    clamped to the padded width (``kb_eff``) — one definition for both
+    orientations, where each kernel previously carried its own copy."""
+    u_p = jnp.pad(pad_rows(u, bk), ((0, 0), (0, (-u.shape[1]) % kb)))
+    kb_eff = min(kb, u_p.shape[1])
+    return u_p, kb_eff
 
 
 def _spmm_kernel(block_cols_ref, tiles_ref, u_ref, out_ref):
@@ -40,19 +64,11 @@ def _spmm_kernel(block_cols_ref, tiles_ref, u_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("kb", "interpret"))
-def bsr_spmm(a: BSR, u: jax.Array, kb: int = 128, interpret: bool = False) -> jax.Array:
-    """Compute ``dense(A) @ U`` for BSR ``A`` (n x m) and dense ``U`` (m x k).
-
-    ``U`` is zero-padded up to block multiples; the result is cropped back
-    to (n, k).
-    """
+def _bsr_spmm_impl(a: BSR, u: jax.Array, kb: int, interpret: bool) -> jax.Array:
     nrb, bcap, bm, bk = a.tiles.shape
-    n, m = a.shape
+    n, _m = a.shape
     k = u.shape[1]
-    m_pad = (-m) % bk
-    k_pad = (-k) % kb
-    u_p = jnp.pad(u, ((0, m_pad), (0, k_pad)))
-    kb_eff = min(kb, u_p.shape[1])
+    u_p, kb_eff = pad_operand(u, bk, kb)
     nkb = u_p.shape[1] // kb_eff
 
     grid = (nrb, nkb, bcap)
@@ -73,13 +89,27 @@ def bsr_spmm(a: BSR, u: jax.Array, kb: int = 128, interpret: bool = False) -> ja
     return out[:n, :k]
 
 
-def bsr_spmm_t(a, u: jax.Array, kb: int = 128, interpret: bool = False) -> jax.Array:
+def bsr_spmm(a: BSR, u: jax.Array, kb: Optional[int] = None,
+             interpret: bool = False) -> jax.Array:
+    """Compute ``dense(A) @ U`` for BSR ``A`` (n x m) and dense ``U`` (m x k).
+
+    ``U`` is zero-padded up to block multiples; the result is cropped back
+    to (n, k).  ``kb=None`` resolves the k-tile through the autotune ledger.
+    """
+    if kb is None:
+        kb = resolve_tiles(a.shape[0], a.shape[1], u.shape[1]).kb
+    return _bsr_spmm_impl(a, u, kb=kb, interpret=interpret)
+
+
+def bsr_spmm_t(a, u: jax.Array, kb: Optional[int] = None,
+               interpret: bool = False) -> jax.Array:
     """Compute ``dense(A)^T @ U`` scatter-free via the transposed-format BSR
     copy built tile-wise at ingest (see :func:`repro.kernels.bsr.bsr_transpose`).
 
     ``a`` is either a :class:`BSROperand` (the two-orientation ingest
     product) or the transposed-format :class:`BSR` itself; the product is
-    the same streaming-tile kernel as :func:`bsr_spmm`, run on A^T's tiles.
+    the same streaming-tile kernel as :func:`bsr_spmm` — padding, clamping
+    and all — run on A^T's tiles.
     """
     a_t = a.bsr_t if isinstance(a, BSROperand) else a
     return bsr_spmm(a_t, u, kb=kb, interpret=interpret)

@@ -9,10 +9,13 @@ iteration.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.autotune import resolve_tiles
 
 
 def _gram_kernel(u_ref, out_ref):
@@ -27,8 +30,7 @@ def _gram_kernel(u_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def gram(u: jax.Array, bm: int = 512, interpret: bool = False) -> jax.Array:
-    """U^T @ U for (n, k) U, accumulated over (bm, k) VMEM slabs."""
+def _gram_impl(u: jax.Array, bm: int, interpret: bool) -> jax.Array:
     n, k = u.shape
     n_pad = (-n) % bm
     u_p = jnp.pad(u, ((0, n_pad), (0, 0)))
@@ -41,3 +43,14 @@ def gram(u: jax.Array, bm: int = 512, interpret: bool = False) -> jax.Array:
         interpret=interpret,
     )(u_p)
     return out
+
+
+def gram(u: jax.Array, bm: Optional[int] = None,
+         interpret: bool = False) -> jax.Array:
+    """U^T @ U for (n, k) U, accumulated over (bm, k) VMEM slabs.
+
+    ``bm=None`` resolves the slab height through the autotune ledger
+    (``gram_bm``, default 512)."""
+    if bm is None:
+        bm = resolve_tiles(u.shape[0], None, u.shape[1]).gram_bm
+    return _gram_impl(u, bm=bm, interpret=interpret)

@@ -13,6 +13,7 @@ from repro.kernels.bsr import (
     bsr_to_dense, bsr_transpose,
 )
 from repro.kernels.bsr_spmm import bsr_spmm, bsr_spmm_t
+from repro.kernels.fused import bsr_spmm_gram, bsr_spmm_gram_t
 from repro.kernels.project_mask import project_mask
 from repro.kernels.gram import gram
 
@@ -34,6 +35,23 @@ def spmm_t(a, u: jax.Array, interpret: bool | None = None) -> jax.Array:
     if interpret is None:
         interpret = _default_interpret()
     return bsr_spmm_t(a, u, interpret=interpret)
+
+
+def spmm_gram(a: BSR, u: jax.Array, interpret: bool | None = None):
+    """``(dense(A) @ U, U^T U)`` in one fused Pallas launch: the ALS
+    half-step's sparse product and Gram share U's VMEM residency (see
+    :mod:`repro.kernels.fused`).  Gram returned in f32."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return bsr_spmm_gram(a, u, interpret=interpret)
+
+
+def spmm_t_gram(a, u: jax.Array, interpret: bool | None = None):
+    """``(dense(A)^T @ U, U^T U)`` fused, on the transposed-format copy
+    (``a``: BSROperand, or the transposed BSR itself)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return bsr_spmm_gram_t(a, u, interpret=interpret)
 
 
 def fused_project_mask(x: jax.Array, tau: jax.Array, interpret: bool | None = None) -> jax.Array:
@@ -58,6 +76,8 @@ __all__ = [
     "bsr_transpose",
     "spmm",
     "spmm_t",
+    "spmm_gram",
+    "spmm_t_gram",
     "fused_project_mask",
     "gram_matrix",
 ]

@@ -9,11 +9,14 @@ scalar in SMEM.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.autotune import resolve_tiles
 
 
 def _project_mask_kernel(tau_ref, x_ref, out_ref):
@@ -23,10 +26,9 @@ def _project_mask_kernel(tau_ref, x_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
-def project_mask(
-    x: jax.Array, tau: jax.Array, bm: int = 256, bk: int = 256, interpret: bool = False
+def _project_mask_impl(
+    x: jax.Array, tau: jax.Array, bm: int, bk: int, interpret: bool
 ) -> jax.Array:
-    """relu + threshold mask over a 2-D array, tiled (bm, bk) in VMEM."""
     n, k = x.shape
     n_pad, k_pad = (-n) % bm, (-k) % bk
     x_p = jnp.pad(x, ((0, n_pad), (0, k_pad)))
@@ -43,3 +45,18 @@ def project_mask(
         interpret=interpret,
     )(jnp.reshape(tau.astype(x.dtype), (1,)), x_p)
     return out[:n, :k]
+
+
+def project_mask(
+    x: jax.Array, tau: jax.Array, bm: Optional[int] = None,
+    bk: Optional[int] = None, interpret: bool = False
+) -> jax.Array:
+    """relu + threshold mask over a 2-D array, tiled (bm, bk) in VMEM.
+
+    ``bm=None`` / ``bk=None`` resolve the tile through the autotune ledger
+    (``mask_bm`` / ``mask_bk``, default 256x256)."""
+    if bm is None or bk is None:
+        tiles = resolve_tiles(x.shape[0], None, x.shape[1])
+        bm = tiles.mask_bm if bm is None else bm
+        bk = tiles.mask_bk if bk is None else bk
+    return _project_mask_impl(x, tau, bm=bm, bk=bk, interpret=interpret)

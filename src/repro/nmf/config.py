@@ -158,7 +158,8 @@ class NMFConfig:
     * ``dtype`` — factor dtype name (numpy/scipy inputs are cast to this;
       jax/SpCSR inputs are taken as-is so legacy results match bit-for-bit).
     * ``backend`` — matmul backend for the ALS hot path: ``"jnp-dense"``,
-      ``"jnp-csr"``, or ``"pallas-bsr"`` (see :mod:`repro.backend`).
+      ``"jnp-csr"``, ``"pallas-bsr"``, or ``"pallas-bsr-unfused"`` (the
+      separate-launch Pallas reference; see :mod:`repro.backend`).
       ``None`` auto-selects from the input type and device: scipy-sparse
       corpora take the Pallas BSR kernel path on TPU and the jnp-csr
       reference elsewhere.  For the ``"distributed"`` solver (and
@@ -214,12 +215,13 @@ class NMFConfig:
                 raise ValueError(
                     f"unknown backend {self.backend!r}; "
                     f"available: {available_backends()}")
-            if self.backend == "pallas-bsr" and self.solver == "sequential":
+            if (self.backend.startswith("pallas-bsr")
+                    and self.solver == "sequential"):
                 raise ValueError(
-                    "backend 'pallas-bsr' is not supported by the "
+                    f"backend {self.backend!r} is not supported by the "
                     "sequential solver; use als/enforced/distributed/"
                     "streaming")
-            shardable = ("jnp-csr", "pallas-bsr")
+            shardable = ("jnp-csr", "pallas-bsr", "pallas-bsr-unfused")
             if (self.solver == "distributed"
                     and self.backend not in shardable):
                 raise ValueError(

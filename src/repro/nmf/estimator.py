@@ -116,7 +116,7 @@ class EnforcedNMF:
             # every shard format re-packs the stored tiles per device
             # (pallas-bsr tile-wise, jnp-csr through the COO front door)
             return a
-        if (chunkable or for_mesh) and name == "pallas-bsr":
+        if (chunkable or for_mesh) and name and name.startswith("pallas-bsr"):
             name = "jnp-csr"
         if name is None:
             if isinstance(a, (SpCSR, BSROperand, jax.Array)):

@@ -72,6 +72,111 @@ def test_spmm_bf16():
 
 
 # ---------------------------------------------------------------------------
+# Fused spmm + gram kernel: vs the separate launches it replaces
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,k", [(128, 128, 8), (300, 200, 40),
+                                   (64, 512, 128), (257, 129, 33)])
+def test_fused_spmm_gram_vs_separate(n, m, k):
+    """Product bit-identical to bsr_spmm (same tile stream, same
+    accumulation order); Gram agrees with the oracle to f32 roundoff."""
+    from repro.kernels.fused import bsr_spmm_gram
+    rng = np.random.default_rng(n + m + k)
+    a = _rand_sparse(rng, n, m)
+    bsr = bsr_from_dense(a, bm=64, bk=64)
+    u = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    y_sep = bsr_spmm(bsr, u, interpret=True)
+    y_f, g_f = bsr_spmm_gram(bsr, u, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_sep))
+    np.testing.assert_allclose(np.asarray(g_f), np.asarray(u.T @ u),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_fused_spmm_gram_t_orientation():
+    from repro.kernels.bsr import bsr_operand
+    from repro.kernels.bsr_spmm import bsr_spmm_t
+    from repro.kernels.fused import bsr_spmm_gram_t
+    rng = np.random.default_rng(11)
+    a = _rand_sparse(rng, 257, 129)
+    op = bsr_operand(jnp.asarray(a), bm=64, bk=64)
+    u = jnp.asarray(rng.standard_normal((257, 5)).astype(np.float32))
+    y_sep = bsr_spmm_t(op, u, interpret=True)
+    y_f, g_f = bsr_spmm_gram_t(op, u, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_sep))
+    np.testing.assert_allclose(np.asarray(g_f), np.asarray(u.T @ u),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_fused_spmm_gram_unreferenced_blocks():
+    """Column blocks no occupied tile references must still contribute to
+    the Gram (the masked-correction path behind lax.cond)."""
+    from repro.kernels.fused import bsr_spmm_gram
+    rng = np.random.default_rng(4)
+    a = np.zeros((128, 256), np.float32)
+    a[:64, :64] = rng.random((64, 64))  # only column-block 0 is referenced
+    bsr = bsr_from_dense(a, bm=64, bk=64)
+    u = jnp.asarray(rng.standard_normal((256, 7)).astype(np.float32))
+    y_f, g_f = bsr_spmm_gram(bsr, u, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_f), a @ np.asarray(u),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g_f), np.asarray(u.T @ u),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_fused_spmm_gram_all_zero_operand():
+    """Degenerate all-padding operand: product is zero, Gram is still the
+    full U^T U (block 0 is covered by padding slots; the correction folds
+    in the rest)."""
+    from repro.kernels.fused import bsr_spmm_gram
+    rng = np.random.default_rng(5)
+    a = np.zeros((100, 180), np.float32)
+    bsr = bsr_from_dense(a, bm=64, bk=64)
+    u = jnp.asarray(rng.standard_normal((180, 4)).astype(np.float32))
+    y_f, g_f = bsr_spmm_gram(bsr, u, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_f), np.zeros((100, 4)))
+    np.testing.assert_allclose(np.asarray(g_f), np.asarray(u.T @ u),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_fused_spmm_gram_bf16():
+    from repro.kernels.fused import bsr_spmm_gram
+    rng = np.random.default_rng(6)
+    a = _rand_sparse(rng, 128, 128)
+    bsr = bsr_from_dense(a.astype(np.float32), bm=64, bk=64)
+    bsr = type(bsr)(bsr.tiles.astype(jnp.bfloat16), bsr.block_cols, bsr.shape)
+    u = jnp.asarray(rng.standard_normal((128, 16)), dtype=jnp.bfloat16)
+    y_sep = bsr_spmm(bsr, u, interpret=True)
+    y_f, g_f = bsr_spmm_gram(bsr, u, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_f, dtype=np.float32),
+                                  np.asarray(y_sep, dtype=np.float32))
+    uf = np.asarray(u, dtype=np.float32)
+    assert g_f.dtype == jnp.float32  # gram accumulates in f32 regardless
+    np.testing.assert_allclose(np.asarray(g_f), uf.T @ uf,
+                               rtol=5e-2, atol=1e-1)
+
+
+def test_fused_backend_matches_unfused_end_to_end():
+    """pallas-bsr (fused half-steps) vs pallas-bsr-unfused (separate
+    launches) through the full ALS engine: factors within 1e-4."""
+    from repro.backend import get_backend
+    from repro.core.nmf import als_nmf, init_u0
+    rng = np.random.default_rng(7)
+    a = _rand_sparse(rng, 192, 160, density=0.1)
+    u0 = init_u0(jax.random.PRNGKey(0), 192, 4)
+    results = {}
+    for name in ("pallas-bsr", "pallas-bsr-unfused"):
+        be = get_backend(name)
+        op = be.prepare(jnp.asarray(a))
+        results[name] = als_nmf(op, u0, iters=5, backend=name)
+    np.testing.assert_allclose(np.asarray(results["pallas-bsr"].u),
+                               np.asarray(results["pallas-bsr-unfused"].u),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(results["pallas-bsr"].v),
+                               np.asarray(results["pallas-bsr-unfused"].v),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # Flash attention kernel
 # ---------------------------------------------------------------------------
 
