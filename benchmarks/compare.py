@@ -7,6 +7,7 @@ gate has two tiers:
   series still present in the fresh run, and the fused-vs-separate
   ordering (``pallas-bsr`` step time <= ``pallas-bsr-unfused`` within
   noise) — the relationship the fused half-step kernels exist to win.
+  Ingest payloads additionally check prefetch-on <= synchronous carving.
 * **wall-clock gating** (fail on > ``--threshold`` step-time regression,
   default 15%) runs only when the fresh run's platform, device kind, and
   benchmark shape match the baseline's.  A CI runner comparing against a
@@ -28,10 +29,13 @@ _METRICS = {
     "backends": ("backends", "step_warm_us"),
     "sharded": ("results", "per_iter_ms"),
     "streaming": ("results", "stream_s"),
+    "ingest": ("results", "stream_s"),
 }
 
 
 def detect_kind(payload: dict) -> str:
+    if payload.get("kind") == "ingest":
+        return "ingest"
     if "backends" in payload:
         return "backends"
     if "chunk_sizes" in payload:
@@ -50,6 +54,11 @@ def _series(payload: dict, kind: str) -> Iterator[Tuple[str, float]]:
             for w, rec in per_chunk.items():
                 if metric in rec:
                     yield f"{mode}/chunk{w}", float(rec[metric])
+    elif kind == "ingest":
+        for mode, per_variant in root.items():
+            for variant, rec in per_variant.items():
+                if isinstance(rec, dict) and metric in rec:
+                    yield f"{mode}/{variant}", float(rec[metric])
     else:
         for name, rec in root.items():
             if metric in rec:
@@ -92,8 +101,28 @@ def check_fused_ordering(payload: dict, kind: str, slack: float) -> list:
     return failures
 
 
+def check_prefetch_ordering(payload: dict, kind: str, slack: float) -> list:
+    """The double-buffered prefetch stream must not be slower than packing
+    every chunk synchronously (within ``slack`` timing noise) — the
+    relationship the ingest prefetcher exists to win."""
+    if kind != "ingest":
+        return []
+    series: Dict[str, float] = dict(_series(payload, kind))
+    failures = []
+    for name, t_sync in series.items():
+        if not name.endswith("/sync"):
+            continue
+        pre_name = name[: -len("sync")] + "prefetch"
+        t_pre = series.get(pre_name)
+        if t_pre is not None and t_pre > t_sync * (1.0 + slack):
+            failures.append(
+                f"prefetch {pre_name} ({t_pre:.6g}) slower than synchronous "
+                f"{name} ({t_sync:.6g}) beyond {slack:.0%} noise")
+    return failures
+
+
 def compare(baseline: dict, fresh: dict, threshold: float,
-            slack: float) -> int:
+            slack: float, prefetch_slack: float = 0.25) -> int:
     kind_b, kind_f = detect_kind(baseline), detect_kind(fresh)
     if kind_b != kind_f:
         print(f"FAIL: benchmark kinds differ ({kind_b} vs {kind_f})",
@@ -110,6 +139,9 @@ def compare(baseline: dict, fresh: dict, threshold: float,
                             f"missing from the fresh run")
 
     failures += check_fused_ordering(fresh, kind, slack)
+    # forced host devices share cores with the pack worker, so the
+    # prefetch<=sync ordering needs more room than the fused check
+    failures += check_prefetch_ordering(fresh, kind, prefetch_slack)
 
     ok_to_time, why = comparable(baseline, fresh)
     if not ok_to_time:
@@ -129,6 +161,22 @@ def compare(baseline: dict, fresh: dict, threshold: float,
                 marker = "  <-- FAIL"
             print(f"  {name}: {t_base:.6g} -> {t_fresh:.6g} "
                   f"({ratio - 1.0:+.1%}){marker}")
+        if kind == "ingest":
+            # overlap floor: wherever the baseline showed the prefetcher
+            # hiding >=50% of synchronous ingest, the fresh run must too
+            for mode, rec in baseline.get("results", {}).items():
+                if not isinstance(rec, dict):
+                    continue
+                h_base = rec.get("prefetch", {}).get("hidden_frac")
+                if h_base is None or h_base < 0.5:
+                    continue
+                h_fresh = (fresh.get("results", {}).get(mode, {})
+                           .get("prefetch", {}).get("hidden_frac"))
+                if h_fresh is not None and h_fresh < 0.5:
+                    failures.append(
+                        f"{mode}: prefetch hides only {h_fresh:.0%} of "
+                        f"synchronous ingest (baseline {h_base:.0%}, "
+                        f"floor 50%)")
 
     if failures:
         for f in failures:
@@ -151,13 +199,17 @@ def main(argv=None) -> int:
                     help="max tolerated step-time regression (default 0.15)")
     ap.add_argument("--fused-slack", type=float, default=0.10,
                     help="timing noise allowed in the fused<=unfused check")
+    ap.add_argument("--prefetch-slack", type=float, default=0.25,
+                    help="timing noise allowed in the prefetch<=sync check "
+                         "(forced host devices contend with the pack worker)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
-    return compare(baseline, fresh, args.threshold, args.fused_slack)
+    return compare(baseline, fresh, args.threshold, args.fused_slack,
+                   args.prefetch_slack)
 
 
 if __name__ == "__main__":

@@ -175,6 +175,33 @@ def _streaming_local_target(backend: str) -> IRTarget:
                     operand_bytes=_nbytes(a), budget_key=name)
 
 
+def _streaming_corpus_target() -> IRTarget:
+    """The prefetch-fed per-chunk step: the same online half-step the
+    out-of-core stream runs, traced over one corpus chunk exactly as the
+    ``Prefetcher`` delivers it — chunk-width operand padded to the shared
+    per-chunk row cap, not the O(corpus) cap of the full matrix."""
+    c = CANON
+    m_chunk, chunk_cap = c["m"] // 8, 4
+    a = _csr_struct(c["n"], m_chunk, chunk_cap)
+    u = _sds((c["n"], c["k"]))
+    av, gv = _sds((c["n"], c["k"])), _sds((c["k"], c["k"]))
+    sp_u, sp_v = _sparsifiers("jnp-csr")
+
+    def trace():
+        from repro.core.online import OnlineStats, online_als_step
+
+        def step(a, u, av, gv, forget):
+            return online_als_step(a, u, OnlineStats(av=av, gv=gv), forget,
+                                   iters=2, sparsify_u=sp_u, sparsify_v=sp_v,
+                                   backend="jnp-csr")
+
+        return jax.make_jaxpr(step)(a, u, av, gv, _sds(()))
+
+    name = "streaming[corpus,jnp-csr]"
+    return IRTarget(name=name, kind="engine", trace=trace,
+                    operand_bytes=_nbytes(a), budget_key=name)
+
+
 # ---------------------------------------------------------------------------
 # Mesh targets: the real shard_mapped steps over forced-host meshes
 # ---------------------------------------------------------------------------
@@ -355,6 +382,7 @@ def default_targets() -> List[IRTarget]:
         targets.append(_als_target(backend, enforced=False))
         targets.append(_als_target(backend, enforced=True))
         targets.append(_streaming_local_target(backend))
+    targets.append(_streaming_corpus_target())
     for backend in ("jnp-dense", "jnp-csr"):
         targets.append(_sequential_target(backend))
     for rc in MESH_SHAPES:

@@ -29,7 +29,7 @@ from repro.analysis.rules._common import (
     NUMPY_MODULES, call_target, sparse_names_in, tail_name,
 )
 
-_SCOPE_RE = re.compile(r"repro/(core|backend|kernels|sparse)/")
+_SCOPE_RE = re.compile(r"repro/(core|backend|kernels|sparse)/|repro/data/corpus")
 _DENSIFY_METHODS = {"todense", "toarray"}
 _ALLOCATORS = {"zeros", "ones", "empty", "full"}
 _CASTERS = {"asarray", "array", "asanyarray"}

@@ -332,7 +332,38 @@ def _attach_engine_api(run, fmt, mesh, rows_axes, cols_axis, be,
     r, c = _grid_of(mesh, rows_axes, cols_axis)
     leaf_specs = fmt.leaf_specs(rows_axes, cols_axis)
 
-    def distribute(a):
+    def distribute(a, pad_cols_to=None):
+        """Shard ``a`` for this engine: ingest into the shard format and
+        ``device_put`` each leaf onto the mesh.  Already-distributed
+        operands pass through ingest unchanged (and the device_put is a
+        no-op on matching shardings), so chunks packed ahead of time — the
+        corpus :class:`~repro.data.corpus.Prefetcher`'s worker thread —
+        cost nothing to re-distribute at step time.
+
+        ``pad_cols_to`` widens the logical column count with empty
+        documents before the shard ingest (streaming chunks whose width
+        the mesh grid doesn't divide).  No stored entries change: an
+        all-zero column yields an exactly-zero V row and contributes
+        nothing to the online statistics."""
+        if pad_cols_to is not None:
+            n, m = a.shape
+            if isinstance(a, (DistCSR, DistBSR)):
+                if a.shape[1] != pad_cols_to:
+                    raise ValueError(
+                        f"operand is already distributed at {a.shape}; pad "
+                        f"to {pad_cols_to} columns before distributing")
+            elif pad_cols_to < m:
+                raise ValueError(
+                    f"pad_cols_to={pad_cols_to} is narrower than the "
+                    f"operand's {m} columns")
+            elif pad_cols_to != m:
+                if isinstance(a, (SpCSR, BSROperand)):
+                    # widen the logical shape only; the shard ingest reads
+                    # elements + the logical shape
+                    a = dataclasses.replace(a, shape=(n, pad_cols_to))
+                else:
+                    a = jnp.pad(jnp.asarray(a),
+                                ((0, 0), (0, pad_cols_to - m)))
         dist = fmt.ingest(a, r, c)
         put = tuple(
             jax.device_put(x, NamedSharding(mesh, s))

@@ -5,6 +5,15 @@ from repro.data.textpipe import (
     STOPWORDS,
 )
 from repro.data.synthetic import synthetic_corpus_matrix, synthetic_journal_corpus
+from repro.data.corpus import (
+    ChunkSource,
+    MmapCorpus,
+    PackedChunk,
+    Prefetcher,
+    as_chunk_source,
+    open_corpus,
+    write_corpus,
+)
 
 __all__ = [
     "build_term_document_matrix",
@@ -13,4 +22,11 @@ __all__ = [
     "STOPWORDS",
     "synthetic_corpus_matrix",
     "synthetic_journal_corpus",
+    "ChunkSource",
+    "MmapCorpus",
+    "PackedChunk",
+    "Prefetcher",
+    "as_chunk_source",
+    "open_corpus",
+    "write_corpus",
 ]

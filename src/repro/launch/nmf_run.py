@@ -149,6 +149,19 @@ def main(argv=None):
                          "document chunks (implies --solver streaming)")
     ap.add_argument("--chunk-docs", type=int, default=None,
                     help="documents per streaming chunk (default: 8 chunks)")
+    ap.add_argument("--corpus-dir", default=None, metavar="PATH",
+                    help="stream an out-of-core corpus from this "
+                         "repro.data.corpus directory (implies --solver "
+                         "streaming).  If PATH has no corpus yet, the "
+                         "synthetic corpus is spilled there first "
+                         "(write_corpus) and then streamed memory-mapped")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the double-buffered host->device chunk "
+                         "prefetcher (synchronous carving; results are "
+                         "bit-identical either way)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="chunks the prefetcher queues ahead of the online "
+                         "step (host memory is O(depth) chunks)")
     ap.add_argument("--mesh", default=None, metavar="RxC",
                     help="device grid for the distributed/streaming solvers, "
                          "e.g. 2x2 (default 1x1); the inner per-shard "
@@ -157,7 +170,8 @@ def main(argv=None):
     ap.add_argument("--small", action="store_true", help="1/8 scale")
     args = ap.parse_args(argv)
 
-    solver = "streaming" if args.stream else args.solver
+    solver = ("streaming" if args.stream or args.corpus_dir
+              else args.solver)
     mesh_shape = (1, 1)
     if args.mesh:
         r, _, c = args.mesh.lower().partition("x")
@@ -184,13 +198,34 @@ def main(argv=None):
     else:
         sparsity = Sparsity(t_u=args.t_u, t_v=args.t_v)
 
-    print(f"building {n}x{m} synthetic corpus ...", flush=True)
-    a, dj = synthetic_journal_corpus(
-        n_terms=n, n_docs=m, n_journals=cfg.get("n_journals", 5))
+    if args.corpus_dir is not None:
+        from pathlib import Path
+
+        from repro.data.corpus import open_corpus, write_corpus
+
+        if not (Path(args.corpus_dir) / "meta.json").exists():
+            print(f"spilling {n}x{m} synthetic corpus to "
+                  f"{args.corpus_dir} ...", flush=True)
+            a_res, _ = synthetic_journal_corpus(
+                n_terms=n, n_docs=m, n_journals=cfg.get("n_journals", 5))
+            write_corpus(a_res, args.corpus_dir, chunk_docs=chunk_docs)
+            del a_res  # the fit below streams it back memory-mapped
+        a = open_corpus(args.corpus_dir)
+        n, m = a.shape
+        chunk_docs = a.chunk_docs
+        print(f"streaming {n}x{m} corpus from {args.corpus_dir} "
+              f"({len(a)} mmap shards, chunk_docs={chunk_docs}, "
+              f"prefetch={'off' if args.no_prefetch else 'on'})",
+              flush=True)
+    else:
+        print(f"building {n}x{m} synthetic corpus ...", flush=True)
+        a, dj = synthetic_journal_corpus(
+            n_terms=n, n_docs=m, n_journals=cfg.get("n_journals", 5))
     model = EnforcedNMF(NMFConfig(
         k=k, iters=iters, sparsity=sparsity, solver=solver,
         tol=args.tol, backend=args.backend, mesh_shape=mesh_shape,
-        chunk_docs=chunk_docs))
+        chunk_docs=chunk_docs, prefetch=not args.no_prefetch,
+        prefetch_depth=args.prefetch_depth))
     t0 = time.time()
     model.fit(a)
     jax.block_until_ready(model.u_)

@@ -40,6 +40,17 @@ def _sparsifier_singleton(mode: str, t: int, num_steps: int, fused: bool):
                              num_steps=num_steps)
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_sparsifier(fn):
+    """One jitted wrapper per sparsifier singleton.  ``Sparsity.apply``
+    runs *outside* the jitted engines (``transform`` fold-ins, the
+    streamed fold-in pass), where an eager call would retrace the
+    bisection scan's body closure every time and compile a fresh
+    executable per fit; through this cache the second same-shaped apply
+    is a pure jit-cache hit."""
+    return jax.jit(fn)
+
+
 @dataclasses.dataclass(frozen=True)
 class Sparsity:
     """Top-t enforcement spec for the two factors (paper Alg. 2 / §4).
@@ -117,7 +128,7 @@ class Sparsity:
         """Enforce this spec on a concrete factor matrix (used by
         ``transform`` / ``partial_fit`` outside the jitted engine)."""
         fn = self.sparsifier(x.shape[0], x.shape[1], which)
-        return x if fn is None else fn(x)
+        return x if fn is None else _jitted_sparsifier(fn)(x)
 
     @classmethod
     def parse(cls, spec: Optional[str]) -> "Sparsity":
@@ -185,6 +196,14 @@ class NMFConfig:
       solver's ``fit`` (``None`` streams in 8 chunks).  ``t_v`` budgets
       resolve against the *full* corpus and are rescaled per chunk, so
       per-document sparsity matches a batch fit.
+    * ``prefetch`` — double-buffer the streaming fit's host-side chunk
+      packing (mmap page-in, operand packing, ``device_put`` / shard
+      distribute) against the in-flight online step on a worker thread
+      (:class:`repro.data.corpus.Prefetcher`).  Results are bit-identical
+      on or off — the toggle is purely a scheduling knob.
+    * ``prefetch_depth`` — max chunks the prefetcher queues ahead of the
+      consumer; host memory for the stream is O(depth) chunks, never
+      O(corpus).
     """
 
     k: int = 5
@@ -199,6 +218,8 @@ class NMFConfig:
     block_size: int = 1
     mesh_shape: Tuple[int, int] = (1, 1)
     chunk_docs: Optional[int] = None
+    prefetch: bool = True
+    prefetch_depth: int = 2
 
     def __post_init__(self):
         if self.k <= 0:
@@ -242,6 +263,9 @@ class NMFConfig:
         if self.chunk_docs is not None and self.chunk_docs <= 0:
             raise ValueError(
                 f"chunk_docs must be positive, got {self.chunk_docs}")
+        if self.prefetch_depth <= 0:
+            raise ValueError(
+                f"prefetch_depth must be positive, got {self.prefetch_depth}")
         jnp.dtype(self.dtype)  # fail fast on bad dtype names
 
     @property

@@ -31,8 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.backend import BSROperand, default_backend_name, get_backend
+from repro.core.distributed import DistBSR, DistCSR
 from repro.core.nmf import (
-    Matrix, _matmul_t, _relative_error, init_u0, solve_gram,
+    Matrix, _matmul, _matmul_t, _relative_error, init_u0, solve_gram,
 )
 from repro.core.online import (
     OnlineStats, init_online_stats, online_als_step, seed_online_stats,
@@ -157,10 +158,28 @@ class EnforcedNMF:
     def fit(self, a: ArrayLike, u0: Optional[jax.Array] = None) -> "EnforcedNMF":
         """Factorize ``a`` with the configured solver.  ``u0`` overrides the
         seeded default initial guess (shape (n, k); the sequential solver
-        also accepts the (n, block_size) block shape)."""
+        also accepts the (n, block_size) block shape).
+
+        With ``solver="streaming"``, ``a`` may also be out of core: a
+        :func:`repro.data.corpus.write_corpus` directory path, an
+        :class:`~repro.data.corpus.MmapCorpus`, or any
+        :class:`~repro.data.corpus.ChunkSource` — chunks stream off disk
+        (double-buffered against compute per ``config.prefetch``) and host
+        memory stays O(chunk), never O(corpus)."""
+        from repro.data.corpus import as_chunk_source, is_corpus_input
+
         cfg = self.config
-        a = self._coerce(a, chunkable=cfg.solver == "streaming",
-                         for_mesh=cfg.solver == "distributed")
+        streamed = is_corpus_input(a)
+        if streamed:
+            if cfg.solver != "streaming":
+                raise ValueError(
+                    f"out-of-core corpora stream chunk-wise; the "
+                    f"{cfg.solver!r} solver needs a resident matrix — use "
+                    "solver='streaming' (or load the corpus yourself)")
+            a = as_chunk_source(a, chunk_docs=cfg.chunk_docs)
+        else:
+            a = self._coerce(a, chunkable=cfg.solver == "streaming",
+                             for_mesh=cfg.solver == "distributed")
         n, m = a.shape
         entry = get_solver(cfg.solver)
         if u0 is None:
@@ -175,16 +194,31 @@ class EnforcedNMF:
         # seed streaming statistics so partial_fit continues from this fit;
         # one extra backend spmm (~1/(2*iters) of the fit) beats pinning
         # the corpus
-        seed_backend = cfg.backend
-        if (seed_backend is not None
-                and not get_backend(seed_backend).accepts(a)):
-            # the corpus stayed in a sliceable / shardable form (streaming
-            # fit keeps SpCSR for column chunks; the mesh paths re-pack per
-            # device) — seed through the operand's own backend instead
-            seed_backend = None
-        stats = seed_online_stats(a, self.v_, backend=seed_backend)
+        if streamed:
+            stats = self._seed_stats_streamed(a)
+        else:
+            seed_backend = cfg.backend
+            if (seed_backend is not None
+                    and not get_backend(seed_backend).accepts(a)):
+                # the corpus stayed in a sliceable / shardable form
+                # (streaming fit keeps SpCSR for column chunks; the mesh
+                # paths re-pack per device) — seed through the operand's
+                # own backend instead
+                seed_backend = None
+            stats = seed_online_stats(a, self.v_, backend=seed_backend)
         self._av_acc, self._gv_acc = stats.av, stats.gv
         return self
+
+    def _seed_stats_streamed(self, source) -> OnlineStats:
+        """Full-corpus online statistics ``(A V, V^T V)`` from a chunk
+        source, one chunk resident at a time: each chunk contributes
+        ``A_c V_c`` with its rows of the fitted loadings."""
+        v = self.v_
+        av = None
+        for i, (lo, hi) in enumerate(source.schedule):
+            part = _matmul(self._coerce(source.load(i)), v[lo:hi])
+            av = part if av is None else av + part
+        return OnlineStats(av=av, gv=v.T @ v)
 
     def fit_transform(self, a: ArrayLike,
                       u0: Optional[jax.Array] = None) -> jax.Array:
@@ -250,14 +284,35 @@ class EnforcedNMF:
         The update is one :func:`repro.core.online.online_als_step` through
         ``config.backend``; with ``solver="streaming"`` and a non-1x1
         ``mesh_shape`` it runs shard_mapped over the device grid with the
-        chunk's columns sharded and the statistics ``psum``-reduced.
+        chunk's columns sharded and the statistics ``psum``-reduced.  A
+        :class:`~repro.data.corpus.PackedChunk` (mesh streaming only) or an
+        already-distributed ``DistCSR`` / ``DistBSR`` shard grid skips the
+        pad + distribute — the corpus prefetcher packs chunks ahead of
+        time, so the step consumes committed per-device buffers.
         """
+        from repro.data.corpus import PackedChunk
+
         if not 0.0 < forget <= 1.0:
             raise ValueError(f"forget must be in (0, 1], got {forget}")
         cfg = self.config
-        a_chunk = self._coerce(a_chunk, for_mesh=self._mesh_streaming())
+        mc_true: Optional[int] = None
+        if isinstance(a_chunk, PackedChunk):
+            if not self._mesh_streaming():
+                raise ValueError(
+                    "PackedChunk carries a mesh-distributed operand; it "
+                    "needs solver='streaming' with a non-1x1 mesh_shape")
+            mc_true = int(a_chunk.m_docs)
+            a_chunk = a_chunk.operand
+        if isinstance(a_chunk, (DistCSR, DistBSR)):
+            if not self._mesh_streaming():
+                raise ValueError(
+                    "distributed shard grids need solver='streaming' with "
+                    "a non-1x1 mesh_shape")
+        else:
+            a_chunk = self._coerce(a_chunk, for_mesh=self._mesh_streaming())
         self._check_features(a_chunk)
-        n, mc = a_chunk.shape
+        n = a_chunk.shape[0]
+        mc = mc_true if mc_true is not None else a_chunk.shape[1]
         if self.u_ is None:
             self.u_ = init_u0(jax.random.PRNGKey(cfg.seed), n,
                               cfg.k).astype(cfg.jnp_dtype)
@@ -271,7 +326,8 @@ class EnforcedNMF:
 
         n_inner = max(iters if iters is not None else min(cfg.iters, 10), 1)
         if self._mesh_streaming():
-            res = self._partial_fit_sharded(a_chunk, stats, n_inner, forget)
+            res = self._partial_fit_sharded(a_chunk, stats, n_inner, forget,
+                                            mc=mc)
         else:
             sp_u = cfg.sparsity.sparsifier(n, cfg.k, "u")
             sp_v = self._v_sparsity(mc).sparsifier(mc, cfg.k, "v")
@@ -285,7 +341,8 @@ class EnforcedNMF:
         return self
 
     def _partial_fit_sharded(self, a_chunk: Matrix, stats: OnlineStats,
-                             n_inner: int, forget: float):
+                             n_inner: int, forget: float,
+                             mc: Optional[int] = None):
         """One online step shard_mapped over the ``config.mesh_shape`` grid:
         chunk columns sharded on ``"model"``, ``u`` / ``stats.av``
         row-sharded on ``"data"``, ``stats.gv`` replicated; sparsity
@@ -293,13 +350,18 @@ class EnforcedNMF:
         (the mesh counterpart of the local bisection threshold).  The chunk
         re-ingests into the inner backend's per-device shard format —
         padded CSR for ``jnp-csr``, BSR tile grids for ``pallas-bsr`` (the
-        MXU streaming-tile kernels inside every shard).
+        MXU streaming-tile kernels inside every shard).  An
+        already-distributed ``DistCSR`` / ``DistBSR`` (packed ahead of time
+        by the corpus prefetcher via :meth:`_pack_mesh_chunk`) passes
+        through the ingest unchanged; ``mc`` then carries the chunk's true
+        document count for the ``t_v`` budget and the ``v`` slice.
 
-        Chunk widths need no mesh alignment: the column count is padded up
-        to a multiple of the cols axis with empty documents — an all-zero
-        column yields an exactly-zero V row and contributes nothing to the
-        statistics — and the returned ``v`` is sliced back.  The *term*
-        axis is a model-lifetime constant and must divide the rows axis.
+        Chunk widths need no mesh alignment: ``engine.distribute`` pads the
+        column count up to a multiple of the cols axis with empty documents
+        — an all-zero column yields an exactly-zero V row and contributes
+        nothing to the statistics — and the returned ``v`` is sliced back.
+        The *term* axis is a model-lifetime constant and must divide the
+        rows axis.
         """
         from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -310,21 +372,15 @@ class EnforcedNMF:
         from repro.nmf.solvers import dist_budget, mesh_inner_backend
 
         cfg = self.config
-        n, mc = a_chunk.shape
+        n, mc_stored = a_chunk.shape
+        mc = mc_stored if mc is None else int(mc)
         r, c = cfg.mesh_shape
         if n % r:
             raise ValueError(
                 f"term count {n} must be divisible by the mesh rows "
                 f"axis {r} (mesh_shape {(r, c)})")
-        mc_pad = -(-mc // c) * c
-        if mc_pad != mc:  # pad with empty documents (zero statistics)
-            if isinstance(a_chunk, (SpCSR, BSROperand)):
-                # widen the logical shape only; no stored entries change
-                # (the shard ingest reads elements + the logical shape)
-                a_chunk = dataclasses.replace(a_chunk, shape=(n, mc_pad))
-            else:
-                a_chunk = jnp.pad(jnp.asarray(a_chunk),
-                                  ((0, 0), (0, mc_pad - mc)))
+        mc_pad = (mc_stored if isinstance(a_chunk, (DistCSR, DistBSR))
+                  else -(-mc // c) * c)
         mesh = make_nmf_mesh(r, c)
 
         rows_axes, cols_axis = ("data",), "model"
@@ -337,7 +393,7 @@ class EnforcedNMF:
             inner=mesh_inner_backend(cfg, a_chunk),
         )
         _, u_spec, _ = engine.specs
-        dist = engine.distribute(a_chunk)
+        dist = engine.distribute(a_chunk, pad_cols_to=mc_pad)
         u = jax.device_put(self.u_, NamedSharding(mesh, u_spec))
         # the jitted step donates av/gv (in-place accumulator rotation —
         # the committed statistics below replace them on success).  These
@@ -354,6 +410,39 @@ class EnforcedNMF:
         if mc_pad != mc:  # drop the empty padding documents' loadings
             res = res._replace(v=res.v[:mc])
         return res
+
+    def _pack_mesh_chunk(self, a_chunk: ArrayLike):
+        """The host half of a mesh streaming step, runnable ahead of time
+        (the corpus :class:`~repro.data.corpus.Prefetcher`'s worker):
+        coerce + pad the chunk to the mesh grid and distribute it —
+        per-device shard ingest plus ``device_put`` — so chunk N+1's
+        transfer rides under chunk N's in-flight online step.  Returns a
+        :class:`~repro.data.corpus.PackedChunk`; :meth:`partial_fit`
+        consumes it with a pass-through ingest and a no-op ``device_put``.
+
+        The engine here carries no sparsifiers — ``distribute`` depends
+        only on the mesh and shard format, both of which the step-time
+        engine shares, so the packed operand is byte-identical to what the
+        synchronous path would build."""
+        from repro.backend.sharded import make_sharded_online
+        from repro.data.corpus import PackedChunk
+        from repro.launch.mesh import make_nmf_mesh
+        from repro.nmf.solvers import mesh_inner_backend
+
+        cfg = self.config
+        host = a_chunk
+        a_chunk = self._coerce(a_chunk, for_mesh=True)
+        n, mc = a_chunk.shape
+        r, c = cfg.mesh_shape
+        if n % r:
+            raise ValueError(
+                f"term count {n} must be divisible by the mesh rows "
+                f"axis {r} (mesh_shape {(r, c)})")
+        engine = make_sharded_online(
+            make_nmf_mesh(r, c), ("data",), "model",
+            inner=mesh_inner_backend(cfg, a_chunk))
+        dist = engine.distribute(a_chunk, pad_cols_to=-(-mc // c) * c)
+        return PackedChunk(operand=dist, m_docs=mc, host=host)
 
     # -- evaluation ----------------------------------------------------------
 

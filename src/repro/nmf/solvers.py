@@ -18,13 +18,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.nmf import Matrix, _relative_error, als_nmf
+from repro.core.nmf import (
+    Matrix, _matmul_t, _relative_error, als_nmf, solve_gram,
+)
 from repro.core.sequential import sequential_als_nmf
 from repro.kernels.bsr import BSROperand
 from repro.nmf.config import NMFConfig
 from repro.nmf.registry import register_solver
 from repro.nmf.result import FitResult
-from repro.sparse.csr import SpCSR, column_block
 
 __all__ = ["solve_als", "solve_enforced", "solve_sequential",
            "solve_distributed", "solve_streaming", "dist_budget",
@@ -69,11 +70,15 @@ def _reject_bsr_operand(a: Matrix, solver_name: str) -> None:
 def mesh_inner_backend(config: NMFConfig, a: Matrix) -> str:
     """The *local per-shard* backend the mesh engines wrap: an explicit
     ``config.backend`` wins; a ``BSROperand`` operand auto-selects the
-    Pallas tile path (its tiles re-pack per device without densifying);
+    Pallas tile path (its tiles re-pack per device without densifying), an
+    already-distributed ``DistBSR`` (a prefetch-packed chunk) keeps it;
     everything else defaults to the padded-CSR reference shards."""
+    from repro.core.distributed import DistBSR
+
     if config.backend is not None:
         return config.backend
-    return "pallas-bsr" if isinstance(a, BSROperand) else "jnp-csr"
+    return ("pallas-bsr" if isinstance(a, (BSROperand, DistBSR))
+            else "jnp-csr")
 
 
 def _run_chunked(run, config: NMFConfig, u0: jax.Array,
@@ -166,6 +171,43 @@ def solve_sequential(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
     return FitResult.from_sequential_result(res)
 
 
+def _make_packer(model):
+    """The host-side pack function the stream (and its
+    :class:`~repro.data.corpus.Prefetcher` worker) runs per chunk.
+
+    Local runs ``device_put`` the chunk's arrays, so the host→device copy
+    of chunk N+1 rides under chunk N's compute (the jitted step then finds
+    committed device buffers — same values it would have transferred
+    itself).  Mesh runs do the full ahead-of-time pack: pad to the grid +
+    per-device shard distribute (:meth:`EnforcedNMF._pack_mesh_chunk`),
+    returning a :class:`~repro.data.corpus.PackedChunk`."""
+    if model._mesh_streaming():
+        return model._pack_mesh_chunk
+    return jax.device_put
+
+
+def _fold_in_streamed(model, source, config: NMFConfig) -> jax.Array:
+    """Frozen-U fold-in of the whole corpus, one chunk at a time: each
+    chunk contributes its rows of the (m, k) right-hand side ``A^T U``,
+    then one shared Gram solve + relu + enforcement — the same normal
+    equations :meth:`EnforcedNMF.transform` solves, without ever holding a
+    resident corpus operand.  Runs the full schedule even when ``tol``
+    early-stopped the factor stream, so ``v`` always covers the corpus."""
+    u = model.u_
+    gram = u.T @ u
+    from repro.data.corpus import Prefetcher
+
+    parts = []
+    with Prefetcher(range(len(source.schedule)),
+                    lambda i: model._coerce(source.load(i)),
+                    depth=config.prefetch_depth,
+                    enabled=config.prefetch) as stream:
+        for chunk in stream:
+            parts.append(_matmul_t(chunk, u))
+    v = solve_gram(gram, jnp.concatenate(parts, axis=0))
+    return model._enforce_v(jnp.maximum(v, 0.0))
+
+
 @register_solver("streaming")
 def solve_streaming(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
     """Online ALS (:mod:`repro.core.online`) over column chunks of ``a`` —
@@ -173,6 +215,19 @@ def solve_streaming(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
     ``config.chunk_docs``-document chunks (default: 8 chunks), so peak
     factor-side memory is one chunk's loadings plus the two sufficient-
     statistics accumulators, never the full ``V``.
+
+    ``a`` may be resident (dense / ``SpCSR``) or out of core: a
+    :func:`repro.data.corpus.write_corpus` directory path,
+    :class:`~repro.data.corpus.MmapCorpus`, or any
+    :class:`~repro.data.corpus.ChunkSource` streams chunks off disk with
+    host memory O(chunk), never O(corpus).  Either way the host half of
+    each step (chunk carve / mmap page-in, operand packing, ``device_put``
+    — on a mesh, the per-device shard distribute) runs on a prefetch
+    worker double-buffered against the in-flight online step
+    (``config.prefetch`` / ``prefetch_depth``; results are bit-identical
+    with prefetch off).  Resident and from-disk fits carve identical chunk
+    arrays under the same schedule, so their trajectories match
+    bit-for-bit.
 
     ``t_v`` budgets resolve against the full corpus and are rescaled per
     chunk, so per-document sparsity matches a batch fit; each chunk gets
@@ -186,8 +241,10 @@ def solve_streaming(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
     The returned history is per *chunk* (``error_granularity="chunk"``):
     ``residual`` is the cross-chunk U movement, ``error`` the relative
     reconstruction error of each chunk, and the final ``v`` is one frozen-U
-    fold-in pass over the whole corpus (shape (m, k)).
+    fold-in pass over the whole corpus (shape (m, k)), streamed chunk-wise
+    over the full schedule.
     """
+    from repro.data.corpus import PackedChunk, Prefetcher, as_chunk_source
     from repro.nmf.estimator import EnforcedNMF
 
     if isinstance(a, BSROperand):
@@ -196,45 +253,45 @@ def solve_streaming(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
             "BSR operands (backend 'pallas-bsr') cannot do; fit with dense "
             "/ SpCSR / scipy input (partial_fit chunks may still use any "
             "backend, pallas-bsr included)")
-    n, m = a.shape
-    w = config.chunk_docs or default_chunk_docs(m)
+    source = as_chunk_source(a, chunk_docs=config.chunk_docs)
+    n, m = source.shape
     model = EnforcedNMF(config)
     model.u_ = u0
     model.n_features_ = n
     model._m_ref = m  # t_v budgets are full-corpus; chunks rescale
+    pack = _make_packer(model)
 
     # per-chunk metrics stay device scalars — only the tol check forces a
     # host sync, so with tol=0 chunk dispatches pipeline freely
     residuals, errors, nnz_us, nnz_vs = [], [], [], []
     max_nnz = jnp.sum(u0 != 0).astype(jnp.int32)
     converged = False
-    lo = 0
-    while lo < m:
-        hi = min(lo + w, m)
-        if isinstance(a, SpCSR):
-            chunk = column_block(a, lo, hi, cap=a.cap)
-        else:
-            chunk = a[:, lo:hi]
-        u_prev = model.u_
-        model.partial_fit(chunk)
-        u, v = model.u_, model.v_
-        num = jnp.linalg.norm(u - u_prev)
-        den = jnp.maximum(jnp.linalg.norm(u), 1e-30)
-        r = num / den
-        residuals.append(r)
-        errors.append(_relative_error(chunk, u, v) if config.track_error
-                      else jnp.float32(0.0))
-        nu = jnp.sum(u != 0).astype(jnp.int32)
-        nv = jnp.sum(v != 0).astype(jnp.int32)
-        nnz_us.append(nu)
-        nnz_vs.append(nv)
-        max_nnz = jnp.maximum(max_nnz, nu + nv)
-        lo = hi
-        if config.tol > 0.0 and float(r) <= config.tol:
-            converged = True
-            break
+    with Prefetcher(range(len(source.schedule)),
+                    lambda i: pack(source.load(i)),
+                    depth=config.prefetch_depth,
+                    enabled=config.prefetch) as stream:
+        for packed in stream:
+            chunk = packed.host if isinstance(packed, PackedChunk) else packed
+            u_prev = model.u_
+            model.partial_fit(packed)
+            u, v = model.u_, model.v_
+            num = jnp.linalg.norm(u - u_prev)
+            den = jnp.maximum(jnp.linalg.norm(u), 1e-30)
+            r = num / den
+            residuals.append(r)
+            errors.append(_relative_error(chunk, u, v) if config.track_error
+                          else jnp.float32(0.0))
+            nu = jnp.sum(u != 0).astype(jnp.int32)
+            nv = jnp.sum(v != 0).astype(jnp.int32)
+            nnz_us.append(nu)
+            nnz_vs.append(nv)
+            max_nnz = jnp.maximum(max_nnz, nu + nv)
+            if config.tol > 0.0 and float(r) <= config.tol:
+                converged = True
+                break
 
-    v_full = model.transform(a)  # frozen-U fold-in: the corpus loadings
+    # frozen-U fold-in: the corpus loadings, streamed chunk-wise
+    v_full = _fold_in_streamed(model, source, config)
     return FitResult(
         u=model.u_, v=v_full,
         residual=jnp.stack(residuals).astype(jnp.float32),

@@ -1,11 +1,11 @@
 """Static-capacity sparse matrix substrate (TPU-friendly padded CSR)."""
 from repro.sparse.csr import (
-    SpCSR, column_block, from_dense, to_dense, spmm, spmm_chunked, spmm_t,
-    spmm_t_chunked, from_coo, from_scipy, to_scipy,
+    ColumnSlicer, SpCSR, column_block, from_dense, to_dense, spmm,
+    spmm_chunked, spmm_t, spmm_t_chunked, from_coo, from_scipy, to_scipy,
 )
 
 __all__ = [
-    "SpCSR", "column_block", "from_dense", "to_dense", "spmm",
-    "spmm_chunked", "spmm_t", "spmm_t_chunked", "from_coo", "from_scipy",
-    "to_scipy",
+    "ColumnSlicer", "SpCSR", "column_block", "from_dense", "to_dense",
+    "spmm", "spmm_chunked", "spmm_t", "spmm_t_chunked", "from_coo",
+    "from_scipy", "to_scipy",
 ]

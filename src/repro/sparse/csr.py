@@ -249,17 +249,83 @@ def spmm_t_chunked(a: SpCSR, u: jax.Array, chunk: int = 64,
     return out.astype(u.dtype)
 
 
+class ColumnSlicer:
+    """Reusable column-sorted index over a padded-CSR corpus.
+
+    ``column_block`` alone masks the *entire* corpus's ``values``/``cols``
+    (and broadcasts a full row-index grid) on every call, so carving a
+    whole stream of chunks is O(chunks x total-nnz).  Building this index
+    once costs one O(nnz log nnz) stable argsort of the element columns;
+    every :meth:`block` afterwards is a binary search plus
+    O(chunk-nnz log chunk-nnz) work — the right shape for the streaming
+    solver and the corpus spill writer, which both walk the full column
+    range chunk by chunk.
+
+    Chunks are bit-identical to :func:`column_block`'s: the slice restores
+    the corpus's row-major (row, slot) element order before packing, so the
+    two carving paths share one numerical identity.
+    """
+
+    def __init__(self, a: SpCSR):
+        values = np.asarray(a.values)
+        cols = np.asarray(a.cols)
+        mask = values != 0
+        # element COO in row-major (row, slot) order — column_block's order
+        self._rows = np.broadcast_to(
+            np.arange(a.n)[:, None], cols.shape)[mask]
+        self._cols = cols[mask]
+        self._vals = values[mask]
+        # column-sorted permutation: the one O(nnz log nnz) pass
+        self._perm = np.argsort(self._cols, kind="stable")
+        self._cols_sorted = self._cols[self._perm]
+        self._a = a
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self._a.shape
+
+    def _range(self, lo: int, hi: int) -> np.ndarray:
+        """Row-major element indices of the columns in ``[lo, hi)``."""
+        if not 0 <= lo < hi <= self._a.m:
+            raise ValueError(
+                f"bad column range [{lo}, {hi}) for m={self._a.m}")
+        i0 = np.searchsorted(self._cols_sorted, lo, side="left")
+        i1 = np.searchsorted(self._cols_sorted, hi, side="left")
+        # ascending original indices == the row-major mask order that the
+        # one-shot column_block produces, so packing matches it bit-for-bit
+        return np.sort(self._perm[i0:i1])
+
+    def block(self, lo: int, hi: int, cap: int | None = None) -> SpCSR:
+        """``a[:, lo:hi]`` with rebased column ids — O(chunk nnz) work."""
+        idx = self._range(lo, hi)
+        return from_coo(self._rows[idx], self._cols[idx] - lo,
+                        self._vals[idx], (self._a.n, hi - lo), cap=cap)
+
+    def max_row_nnz(self, lo: int, hi: int) -> int:
+        """Max stored nonzeros any row has inside columns ``[lo, hi)`` —
+        how chunk capacities are sized without carving the chunk."""
+        idx = self._range(lo, hi)
+        if not len(idx):
+            return 0
+        return int(np.bincount(self._rows[idx]).max())
+
+    def chunk_cap(self, schedule) -> int:
+        """One shared slot capacity for every ``(lo, hi)`` chunk in
+        ``schedule``: the max per-chunk row occupancy, so all chunks get
+        the same (n, cap) shape (the jitted online step compiles once)
+        while staying O(chunk nnz), not O(corpus cap), per chunk."""
+        return max(max((self.max_row_nnz(lo, hi) for lo, hi in schedule),
+                       default=1), 1)
+
+
 def column_block(a: SpCSR, lo: int, hi: int, cap: int | None = None) -> SpCSR:
     """Host-side column slice ``a[:, lo:hi]`` with rebased column ids —
     how the streaming solver carves document chunks out of a padded-CSR
     corpus without densifying.  Work and temporaries are nnz-proportional.
     Pass ``cap=a.cap`` to pin every chunk to the same slot capacity so the
-    jitted online step compiles once across the stream."""
-    if not 0 <= lo < hi <= a.m:
-        raise ValueError(f"bad column range [{lo}, {hi}) for m={a.m}")
-    values = np.asarray(a.values)
-    cols = np.asarray(a.cols)
-    mask = (values != 0) & (cols >= lo) & (cols < hi)
-    rows = np.broadcast_to(np.arange(a.n)[:, None], cols.shape)[mask]
-    return from_coo(rows, cols[mask] - lo, values[mask], (a.n, hi - lo),
-                    cap=cap)
+    jitted online step compiles once across the stream.
+
+    One-shot convenience over :class:`ColumnSlicer`; carving *many* chunks
+    of one corpus should build the slicer once instead of re-scanning the
+    full element set per chunk."""
+    return ColumnSlicer(a).block(lo, hi, cap=cap)

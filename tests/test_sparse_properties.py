@@ -14,18 +14,29 @@ Invariants pinned here:
   block-columns within every row-block (the layout the Pallas kernels
   stream by);
 * **oracle agreement** — every format and both ``BSROperand``
-  orientations reconstruct the dense matrix exactly.
+  orientations reconstruct the dense matrix exactly;
+* **carve equivalence** — ``ColumnSlicer`` (the reusable column-sorted
+  index the streaming sources carve through) produces bit-identical
+  chunks to the one-shot ``column_block`` scan, and a
+  :func:`repro.data.corpus.write_corpus` directory read back memory-mapped
+  reproduces those chunks exactly.
 """
+import shutil
+import tempfile
+
 import numpy as np
 import pytest
 
 from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
 
+from repro.data.corpus import ResidentChunks, open_corpus, write_corpus
 from repro.kernels.bsr import (
     BSR, bsr_from_dense, bsr_operand, bsr_to_coo, bsr_to_dense,
     bsr_transpose,
 )
-from repro.sparse.csr import SpCSR, column_block, from_coo, from_dense, to_dense
+from repro.sparse.csr import (
+    ColumnSlicer, SpCSR, column_block, from_coo, from_dense, to_dense,
+)
 
 
 def random_sparse(seed: int, n: int, m: int, density: float) -> np.ndarray:
@@ -118,6 +129,49 @@ def check_operand_orientations(a_dense: np.ndarray, bm: int, bk: int):
     np.testing.assert_array_equal(dense_of_bsr(op.bsr_t, (m, n)), a_dense.T)
 
 
+def check_slicer_matches_one_shot(a_dense: np.ndarray, chunk_docs: int):
+    """``ColumnSlicer.block`` must be *bit-identical* (values, cols, padding
+    slots) to the one-shot ``column_block`` scan it replaced — the streaming
+    trajectory depends on the packed layout, not just the dense content."""
+    sp = from_dense(a_dense)
+    slicer = ColumnSlicer(sp)
+    m = a_dense.shape[1]
+    schedule = [(lo, min(lo + chunk_docs, m)) for lo in range(0, m, chunk_docs)]
+    cap = slicer.chunk_cap(schedule)
+    assert cap <= max(sp.cap, 1)
+    for lo, hi in schedule:
+        got = slicer.block(lo, hi, cap=cap)
+        want = column_block(sp, lo, hi, cap=cap)
+        np.testing.assert_array_equal(np.asarray(got.values),
+                                      np.asarray(want.values))
+        np.testing.assert_array_equal(np.asarray(got.cols),
+                                      np.asarray(want.cols))
+        assert got.shape == want.shape == (a_dense.shape[0], hi - lo)
+
+
+def check_corpus_round_trip(a_dense: np.ndarray, chunk_docs: int):
+    """writer -> mmap round trip: the shards read back are the exact
+    arrays ``ResidentChunks`` carves, and they reassemble the dense
+    oracle."""
+    sp = from_dense(a_dense)
+    res = ResidentChunks(sp, chunk_docs)
+    tmp = tempfile.mkdtemp()
+    try:
+        disk = open_corpus(write_corpus(sp, tmp, chunk_docs=chunk_docs))
+        assert disk.shape == sp.shape and disk.cap == res.cap
+        assert disk.schedule == res.schedule
+        for i, (lo, hi) in enumerate(disk.schedule):
+            got, want = disk.load(i), res.load(i)
+            np.testing.assert_array_equal(np.asarray(got.values),
+                                          np.asarray(want.values))
+            np.testing.assert_array_equal(np.asarray(got.cols),
+                                          np.asarray(want.cols))
+            np.testing.assert_array_equal(dense_of_csr(got),
+                                          a_dense[:, lo:hi])
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 class _nullcontext:
     def __enter__(self):
         return None
@@ -154,6 +208,24 @@ def test_bsr_operand_orientations_property(seed, n, m, bm, bk, density):
     check_operand_orientations(random_sparse(seed, n, m, density), bm, bk)
 
 
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 24),
+       m=st.integers(1, 32), chunk_docs=st.integers(1, 12),
+       density=st.floats(0.0, 0.9))
+def test_column_slicer_matches_one_shot_property(seed, n, m, chunk_docs,
+                                                 density):
+    check_slicer_matches_one_shot(random_sparse(seed, n, m, density),
+                                  chunk_docs)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 20),
+       m=st.integers(1, 24), chunk_docs=st.integers(1, 10),
+       density=st.floats(0.0, 0.9))
+def test_corpus_round_trip_property(seed, n, m, chunk_docs, density):
+    check_corpus_round_trip(random_sparse(seed, n, m, density), chunk_docs)
+
+
 # ---------------------------------------------------------------------------
 # deterministic sweeps: same invariants, always run (no hypothesis needed)
 # ---------------------------------------------------------------------------
@@ -186,6 +258,27 @@ def test_bsr_invariants_deterministic(seed, n, m, bm, bk, bcap, density):
 ])
 def test_bsr_operand_orientations_deterministic(seed, n, m, bm, bk):
     check_operand_orientations(random_sparse(seed, n, m, 0.4), bm, bk)
+
+
+@pytest.mark.parametrize("seed,n,m,chunk_docs,density", [
+    (0, 14, 20, 6, 0.4),    # ragged final chunk (20 = 6+6+6+2)
+    (1, 8, 16, 16, 0.5),    # one chunk covering everything
+    (2, 10, 9, 1, 0.8),     # one document per chunk
+    (3, 6, 6, 4, 0.0),      # empty matrix
+])
+def test_column_slicer_matches_one_shot_deterministic(seed, n, m, chunk_docs,
+                                                      density):
+    check_slicer_matches_one_shot(random_sparse(seed, n, m, density),
+                                  chunk_docs)
+
+
+@pytest.mark.parametrize("seed,n,m,chunk_docs,density", [
+    (0, 14, 20, 6, 0.4),
+    (1, 10, 9, 3, 0.0),     # empty shards round-trip too
+    (2, 5, 12, 5, 0.9),
+])
+def test_corpus_round_trip_deterministic(seed, n, m, chunk_docs, density):
+    check_corpus_round_trip(random_sparse(seed, n, m, density), chunk_docs)
 
 
 def test_column_block_matches_dense_slice():
