@@ -1,0 +1,98 @@
+"""Checkpoint-overhead benchmark: what fault tolerance costs per step.
+
+Runs the same batch ALS fit twice — plain, and with atomic snapshots every
+``--every`` iterations (the robustness layer's checkpoint/resume path) —
+and reports per-iteration step time for both plus the overhead fraction.
+Writes ``BENCH_checkpoint.json``; ``compare.py`` gates the overhead
+structurally (checkpointing every 10 iterations must cost < 5% step time,
+plus timing slack), so "fault tolerance is effectively free" is a CI
+invariant, not a hope.
+
+    PYTHONPATH=src python benchmarks/bench_checkpoint.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import tempfile
+import time
+
+import jax
+
+
+def _fit_once(a, cfg):
+    from repro.nmf import EnforcedNMF
+
+    t0 = time.perf_counter()
+    model = EnforcedNMF(cfg).fit(a)
+    jax.block_until_ready(model.u_)
+    return time.perf_counter() - t0
+
+
+def bench(n: int, m: int, k: int, iters: int, every: int, seed: int = 0):
+    from repro.data import synthetic_journal_corpus
+    from repro.nmf import NMFConfig, Sparsity
+
+    a_sp, _ = synthetic_journal_corpus(n_terms=n, n_docs=m, n_journals=5,
+                                       seed=seed)
+    sparsity = Sparsity(t_u=max(n * k // 50, k), t_v=max(m * k // 50, k))
+    plain_cfg = NMFConfig(k=k, iters=iters, seed=seed, sparsity=sparsity)
+
+    _fit_once(a_sp, plain_cfg)                       # compile warm-up
+    plain_s = min(_fit_once(a_sp, plain_cfg) for _ in range(3))
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        ckpt_cfg = plain_cfg.replace(checkpoint_dir=ckpt_dir,
+                                     checkpoint_every=every)
+        _fit_once(a_sp, ckpt_cfg)                    # compile the part shape
+        ckpt_s = min(_fit_once(a_sp, ckpt_cfg) for _ in range(3))
+
+    return {
+        "plain": {"fit_s": plain_s, "step_ms": plain_s / iters * 1e3},
+        "checkpointed": {
+            "fit_s": ckpt_s,
+            "step_ms": ckpt_s / iters * 1e3,
+            "snapshots": (iters - 1) // every,
+            "overhead_frac": ckpt_s / plain_s - 1.0,
+        },
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shape for the per-push CI gate")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--every", type=int, default=10,
+                    help="checkpoint cadence in iterations (default 10)")
+    ap.add_argument("--out", default="BENCH_checkpoint.json")
+    args = ap.parse_args(argv)
+
+    if args.full:
+        n, m, k, iters = 25_000, 12_000, 16, 100
+    elif args.smoke:
+        n, m, k, iters = 1024, 512, 8, 60
+    else:
+        n, m, k, iters = 4096, 2048, 8, 60
+    results = bench(n, m, k, iters, args.every)
+
+    payload = {
+        "kind": "checkpoint",
+        "shape": {"n": n, "m": m, "k": k, "iters": iters,
+                  "every": args.every},
+        "devices": len(jax.devices()),
+        "device_kind": jax.default_backend(),
+        "platform": platform.platform(),
+        "jax_version": jax.__version__,
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(json.dumps(payload, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,12 +30,15 @@ _METRICS = {
     "sharded": ("results", "per_iter_ms"),
     "streaming": ("results", "stream_s"),
     "ingest": ("results", "stream_s"),
+    "checkpoint": ("results", "step_ms"),
 }
 
 
 def detect_kind(payload: dict) -> str:
     if payload.get("kind") == "ingest":
         return "ingest"
+    if payload.get("kind") == "checkpoint":
+        return "checkpoint"
     if "backends" in payload:
         return "backends"
     if "chunk_sizes" in payload:
@@ -121,8 +124,29 @@ def check_prefetch_ordering(payload: dict, kind: str, slack: float) -> list:
     return failures
 
 
+def check_checkpoint_overhead(payload: dict, kind: str, budget: float,
+                              slack: float) -> list:
+    """Checkpointing must stay effectively free: the snapshotted fit's
+    step time may exceed the plain fit's by at most ``budget`` (the
+    robustness layer's <5% contract) plus ``slack`` timing noise."""
+    if kind != "checkpoint":
+        return []
+    results = payload.get("results", {})
+    t_plain = results.get("plain", {}).get("step_ms")
+    t_ckpt = results.get("checkpointed", {}).get("step_ms")
+    if t_plain is None or t_ckpt is None:
+        return ["checkpoint payload missing plain/checkpointed step_ms"]
+    ceiling = 1.0 + budget + slack
+    if t_ckpt > t_plain * ceiling:
+        return [f"checkpointing overhead {t_ckpt / t_plain - 1.0:+.1%} "
+                f"exceeds the {budget:.0%} budget (+{slack:.0%} noise): "
+                f"plain {t_plain:.6g}ms vs checkpointed {t_ckpt:.6g}ms"]
+    return []
+
+
 def compare(baseline: dict, fresh: dict, threshold: float,
-            slack: float, prefetch_slack: float = 0.25) -> int:
+            slack: float, prefetch_slack: float = 0.25,
+            ckpt_slack: float = 0.10) -> int:
     kind_b, kind_f = detect_kind(baseline), detect_kind(fresh)
     if kind_b != kind_f:
         print(f"FAIL: benchmark kinds differ ({kind_b} vs {kind_f})",
@@ -142,6 +166,8 @@ def compare(baseline: dict, fresh: dict, threshold: float,
     # forced host devices share cores with the pack worker, so the
     # prefetch<=sync ordering needs more room than the fused check
     failures += check_prefetch_ordering(fresh, kind, prefetch_slack)
+    failures += check_checkpoint_overhead(fresh, kind, budget=0.05,
+                                          slack=ckpt_slack)
 
     ok_to_time, why = comparable(baseline, fresh)
     if not ok_to_time:
@@ -202,6 +228,9 @@ def main(argv=None) -> int:
     ap.add_argument("--prefetch-slack", type=float, default=0.25,
                     help="timing noise allowed in the prefetch<=sync check "
                          "(forced host devices contend with the pack worker)")
+    ap.add_argument("--ckpt-slack", type=float, default=0.10,
+                    help="timing noise allowed on top of the 5% checkpoint "
+                         "overhead budget")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -209,7 +238,7 @@ def main(argv=None) -> int:
     with open(args.fresh) as f:
         fresh = json.load(f)
     return compare(baseline, fresh, args.threshold, args.fused_slack,
-                   args.prefetch_slack)
+                   args.prefetch_slack, args.ckpt_slack)
 
 
 if __name__ == "__main__":

@@ -2,6 +2,7 @@
 :func:`repro.analysis.framework.all_rules` does so lazily."""
 from repro.analysis.rules import (  # noqa: F401
     donation,
+    exception_hygiene,
     jit_cache,
     no_densify,
     pallas_purity,

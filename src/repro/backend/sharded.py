@@ -396,7 +396,7 @@ def _sharded_als_shard_fn(mesh, rows_axes, cols_axis, sparsify_u, sparsify_v,
     _, u_spec, v_spec = make_dist_specs(rows_axes, cols_axis)
     rep = P()
     out_specs = NMFResult(u=u_spec, v=v_spec, residual=rep, error=rep,
-                          max_nnz=rep, nnz_u=rep, nnz_v=rep)
+                          max_nnz=rep, nnz_u=rep, nnz_v=rep, health=rep)
 
     def step_fn(*args):
         *leaves, u0 = args
@@ -498,7 +498,7 @@ def _sharded_online_shard_fn(mesh, rows_axes, cols_axis, sparsify_u,
     _, u_spec, v_spec = make_dist_specs(rows_axes, cols_axis)
     rep = P()
     out_specs = OnlineStepResult(
-        u=u_spec, v=v_spec, stats=OnlineStats(av=u_spec, gv=rep))
+        u=u_spec, v=v_spec, stats=OnlineStats(av=u_spec, gv=rep), health=rep)
 
     def step_fn(*args):
         *leaves, u, av, gv, forget = args

@@ -42,8 +42,12 @@ def _flatten_with_names(tree: Params):
     return names, leaves, treedef
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree: Params) -> str:
-    """Atomic save of an arbitrary pytree of arrays."""
+def save_checkpoint(ckpt_dir: str, step: int, tree: Params,
+                    meta: Optional[dict] = None) -> str:
+    """Atomic save of an arbitrary pytree of arrays.  ``meta`` is an
+    optional JSON-serializable dict stored in the manifest — the side
+    channel for host scalars, history lists, and fingerprints that cannot
+    ride the array payload (strings do not survive ``jnp.asarray``)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
     final = os.path.join(ckpt_dir, f"step_{step}")
@@ -60,8 +64,11 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Params) -> str:
             a = a.view(np.uint16)
         arrays[f"a{i}"] = a
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {"step": step, "names": names, "dtypes": dtypes}
+    if meta is not None:
+        manifest["meta"] = meta
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump({"step": step, "names": names, "dtypes": dtypes}, f)
+        json.dump(manifest, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
@@ -79,6 +86,24 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
             except ValueError:
                 pass
     return max(steps) if steps else None
+
+
+def load_checkpoint_arrays(ckpt_dir: str, step: int
+                           ) -> Tuple[dict, Optional[dict]]:
+    """Read a checkpoint as ``({name: np.ndarray}, meta)`` — the raw host
+    view for callers (the NMF fit checkpointer) whose state is a flat
+    name->array dict rather than a fixed pytree structure."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = [data[f"a{i}"] for i in range(len(data.files))]
+    for i, dt in enumerate(manifest.get("dtypes", [])):
+        if dt == "bfloat16":
+            import ml_dtypes
+            arrays[i] = arrays[i].view(ml_dtypes.bfloat16)
+    named = dict(zip(manifest["names"], arrays))
+    return named, manifest.get("meta")
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, like: Params,

@@ -47,6 +47,14 @@ class NMFResult(NamedTuple):
     max_nnz: jax.Array     # scalar — max NNZ(U)+NNZ(V) over the run
     nnz_u: jax.Array       # (iters,)
     nnz_v: jax.Array       # (iters,)
+    health: jax.Array = jnp.int32(-1)  # first unhealthy iteration, -1 = ok
+
+
+#: relative-residual ceiling for the in-scan health monitor; R is
+#: ||U_i - U_{i-1}||_F / ||U_i||_F, which sits in [0, O(1)] for any sane
+#: trajectory — crossing this means the factors are diverging even if
+#: every entry is still technically finite
+_RESIDUAL_BLOWUP = 1e6
 
 
 def init_u0(key: jax.Array, n: int, k: int, nnz: Optional[int] = None) -> jax.Array:
@@ -181,7 +189,7 @@ def als_nmf(
         return be.relative_error(a, u, v, a_sqnorm)
 
     def body(carry, _):
-        u, _v, max_nnz = carry
+        u, _v, max_nnz, health, it = carry
         # each half-step's sparse product and Gram read the same factor, so
         # they come from one backend hook: fused into a single kernel sweep
         # on the Pallas path, separate matmul+gram calls (bit-for-bit the
@@ -203,11 +211,23 @@ def als_nmf(
         nu = be.reduce_u(jnp.sum(u_new != 0))
         nv = be.reduce_v(jnp.sum(v != 0))
         max_nnz = jnp.maximum(max_nnz, nu + nv)
-        return (u_new, v, max_nnz), (r, e, nu, nv)
+
+        # FitHealth monitor: record the first iteration whose factors went
+        # non-finite or whose residual exploded.  Counting non-finite
+        # entries (rather than jnp.all(isfinite)) keeps the check a plain
+        # sum, so it rides the existing psum reduction hooks on a mesh.
+        bad_u = be.reduce_u(jnp.sum(~jnp.isfinite(u_new)).astype(jnp.int32))
+        bad_v = be.reduce_v(jnp.sum(~jnp.isfinite(v)).astype(jnp.int32))
+        bad = ((bad_u + bad_v > 0) | ~jnp.isfinite(r)
+               | (r > _RESIDUAL_BLOWUP))
+        health = jnp.where((health < 0) & bad, it, health)
+        return (u_new, v, max_nnz, health, it + 1), (r, e, nu, nv)
 
     init_nnz = be.reduce_u(jnp.sum(u0 != 0))
     v0 = jnp.zeros((m, k), dtype=u0.dtype)
-    (u, v, max_nnz), (rs, es, nus, nvs) = jax.lax.scan(
-        body, (u0, v0, init_nnz.astype(jnp.int32)), None, length=iters
+    (u, v, max_nnz, health, _), (rs, es, nus, nvs) = jax.lax.scan(
+        body,
+        (u0, v0, init_nnz.astype(jnp.int32), jnp.int32(-1), jnp.int32(0)),
+        None, length=iters,
     )
-    return NMFResult(u, v, rs, es, max_nnz, nus, nvs)
+    return NMFResult(u, v, rs, es, max_nnz, nus, nvs, health)

@@ -52,6 +52,7 @@ class OnlineStepResult(NamedTuple):
     u: jax.Array        # (n, k) refined factor
     v: jax.Array        # (m_chunk, k) loadings of this chunk's documents
     stats: OnlineStats  # accumulators including this chunk's contribution
+    health: jax.Array = jnp.int32(-1)  # first unhealthy inner pass, -1 = ok
 
 
 def init_online_stats(n: int, k: int, dtype=jnp.float32) -> OnlineStats:
@@ -104,7 +105,7 @@ def online_als_step(
     forget = jnp.asarray(forget, dtype=u.dtype)
 
     def body(carry, _):
-        u, _v, _gv, _av = carry
+        u, _v, _gv, _av, health, it = carry
         # fused half-step pairs, like the batch engine: one kernel sweep
         # computes the chunk product and the Gram on the Pallas path
         atu, gu = be.matmul_t_with_gram(a_chunk, u)
@@ -115,10 +116,20 @@ def online_als_step(
         av = forget * stats.av + av_c
         u_new = solve_gram(gv, av)
         u_new = _epilogue(u_new, sparsify_u)
-        return (u_new, v, gv, av), None
+
+        # FitHealth monitor (mirrors the batch engine): plain sums over the
+        # factors plus the replicated gv accumulator, phrased through the
+        # reduce hooks so the same check psums on a mesh.
+        bad_u = be.reduce_u(jnp.sum(~jnp.isfinite(u_new)).astype(jnp.int32))
+        bad_v = be.reduce_v(jnp.sum(~jnp.isfinite(v)).astype(jnp.int32))
+        bad = (bad_u + bad_v > 0) | ~jnp.isfinite(jnp.sum(gv))
+        health = jnp.where((health < 0) & bad, it, health)
+        return (u_new, v, gv, av, health, it + 1), None
 
     v0 = jnp.zeros((m_chunk, k), dtype=u.dtype)
-    (u, v, gv, av), _ = jax.lax.scan(
-        body, (u, v0, stats.gv, stats.av), None, length=max(int(iters), 1)
+    (u, v, gv, av, health, _), _ = jax.lax.scan(
+        body, (u, v0, stats.gv, stats.av, jnp.int32(-1), jnp.int32(0)),
+        None, length=max(int(iters), 1)
     )
-    return OnlineStepResult(u=u, v=v, stats=OnlineStats(av=av, gv=gv))
+    return OnlineStepResult(u=u, v=v, stats=OnlineStats(av=av, gv=gv),
+                            health=health)

@@ -37,7 +37,7 @@ class SequentialResult(NamedTuple):
 @functools.partial(
     jax.jit,
     static_argnames=("k2", "blocks", "iters", "t_u", "t_v", "track_error",
-                     "backend"),
+                     "backend", "total_blocks"),
 )
 def sequential_als_nmf(
     a: Matrix,
@@ -49,10 +49,22 @@ def sequential_als_nmf(
     t_v: Optional[int] = None,
     track_error: bool = True,
     backend: Optional[str] = None,
+    total_blocks: Optional[int] = None,
+    carry_u: Optional[jax.Array] = None,
+    carry_v: Optional[jax.Array] = None,
+    start_block=0,
 ) -> SequentialResult:
+    """With the defaults this converges all ``blocks`` topic blocks in one
+    call.  The checkpointing driver instead runs *groups* of blocks:
+    ``total_blocks`` fixes the full factor width ``k2 * total_blocks``,
+    ``carry_u`` / ``carry_v`` resume the zero-padded converged factors from
+    a previous group, and ``start_block`` offsets the block indices this
+    call converges — ``blocks`` then counts only this group's blocks.
+    Restarting a group from the carried factors is exactly equivalent to
+    one long run: each block update reads only ``(a, u0, U1, V1)``."""
     n = a.shape[0]
     m = a.shape[1]
-    k = k2 * blocks
+    k = k2 * (blocks if total_blocks is None else total_blocks)
     dtype = u0.dtype
 
     from repro.sparse.csr import SpCSR
@@ -109,11 +121,11 @@ def sequential_als_nmf(
         e = error_of(u1, v1)
         return (u1, v1, max_nnz), (rs, e)
 
-    u1 = jnp.zeros((n, k), dtype)
-    v1 = jnp.zeros((m, k), dtype)
+    u1 = jnp.zeros((n, k), dtype) if carry_u is None else carry_u
+    v1 = jnp.zeros((m, k), dtype) if carry_v is None else carry_v
     (u1, v1, max_nnz), (rs, es) = jax.lax.scan(
         block_step,
         (u1, v1, jnp.sum(u0 != 0).astype(jnp.int32)),
-        jnp.arange(blocks),
+        jnp.arange(blocks) + start_block,
     )
     return SequentialResult(u1, v1, rs, es, max_nnz)

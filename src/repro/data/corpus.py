@@ -42,22 +42,56 @@ import os
 import queue
 import threading
 import time
+import warnings
+import zlib
 from pathlib import Path
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.robustness import faults
 from repro.sparse.csr import ColumnSlicer, SpCSR, from_dense, from_scipy
 
 __all__ = [
-    "CORPUS_FORMAT", "ChunkSource", "DenseChunks", "MmapCorpus",
-    "PackedChunk", "Prefetcher", "ResidentChunks", "as_chunk_source",
-    "chunk_schedule", "is_corpus_input", "open_corpus", "write_corpus",
+    "CORPUS_FORMAT", "ChunkPackError", "ChunkSource", "CorpusIntegrityError",
+    "DenseChunks", "MmapCorpus", "PackedChunk", "Prefetcher",
+    "ResidentChunks", "as_chunk_source", "chunk_schedule", "is_corpus_input",
+    "open_corpus", "write_corpus",
 ]
 
-#: manifest format tag; bump on incompatible layout changes
-CORPUS_FORMAT = "repro-corpus-v1"
+#: manifest format tag; bump on incompatible layout changes.  v2 adds
+#: per-shard crc32 checksums (``crc_values`` / ``crc_cols`` per chunk
+#: entry), validated lazily on first load of each shard.
+CORPUS_FORMAT = "repro-corpus-v2"
+_FORMAT_V1 = "repro-corpus-v1"
 _META = "meta.json"
+
+#: set to "1" to turn unreadable / corrupt chunks into a warning + skip
+#: instead of a hard failure (the stream then fits on the surviving
+#: chunks — degraded results, but a live run)
+SKIP_BAD_CHUNKS_ENV = "REPRO_STREAM_SKIP_BAD_CHUNKS"
+
+
+class CorpusIntegrityError(RuntimeError):
+    """A shard's bytes no longer match the checksum recorded when the
+    corpus was written (bit rot, truncated copy, torn write)."""
+
+
+class ChunkPackError(RuntimeError):
+    """A chunk failed to pack after exhausting its retry budget.  Carries
+    ``item`` (the scheduled work item — for corpus streams, the chunk
+    index) and ``index`` (the item's position in the schedule); the
+    original failure rides as ``__cause__``."""
+
+    def __init__(self, message: str, item=None, index: Optional[int] = None):
+        super().__init__(message)
+        self.item = item
+        self.index = index
+
+
+def _crc_array(x) -> int:
+    """crc32 of an array's raw bytes (C-contiguous view)."""
+    return zlib.crc32(np.ascontiguousarray(x).view(np.uint8).reshape(-1))
 
 
 def chunk_schedule(m: int, chunk_docs: int) -> List[Tuple[int, int]]:
@@ -117,6 +151,7 @@ class ResidentChunks(ChunkSource):
         self.cap = self._slicer.chunk_cap(self.schedule)
 
     def load(self, i: int) -> SpCSR:
+        faults.fire("chunk-load", i)
         lo, hi = self.schedule[i]
         return self._slicer.block(lo, hi, cap=self.cap)
 
@@ -140,7 +175,13 @@ class MmapCorpus(ChunkSource):
     ``load(i)`` wraps shard ``i``'s ``values``/``cols`` files with
     ``np.load(mmap_mode="r")`` — the OS pages in exactly the bytes the
     online step touches, so opening a corpus costs O(manifest) and
-    streaming it costs O(chunk) resident bytes at a time."""
+    streaming it costs O(chunk) resident bytes at a time.
+
+    v2 corpora record a crc32 per shard file; ``load`` verifies each
+    shard's bytes against it the *first* time the shard is read (later
+    loads — the fold-in pass, a rollback replay — skip the re-hash) and
+    raises :class:`CorpusIntegrityError` on mismatch.  v1 corpora load
+    unchanged, with a one-time warning that they carry no checksums."""
 
     def __init__(self, path):
         self.path = Path(path)
@@ -150,24 +191,54 @@ class MmapCorpus(ChunkSource):
             raise FileNotFoundError(
                 f"{self.path} is not a corpus directory (no {_META}); "
                 "write one with repro.data.corpus.write_corpus") from None
-        if meta.get("format") != CORPUS_FORMAT:
+        fmt = meta.get("format")
+        if fmt not in (CORPUS_FORMAT, _FORMAT_V1):
             raise ValueError(
-                f"{self.path / _META}: format {meta.get('format')!r} is not "
-                f"{CORPUS_FORMAT!r}")
+                f"{self.path / _META}: format {fmt!r} is not "
+                f"{CORPUS_FORMAT!r} (or the legacy {_FORMAT_V1!r})")
+        self.format = fmt
         self.shape = (int(meta["n"]), int(meta["m"]))
         self.chunk_docs = int(meta["chunk_docs"])
         self.cap = int(meta["cap"])
         self.dtype = np.dtype(meta["dtype"])
         self._chunks = meta["chunks"]
+        #: per-shard [crc_values, crc_cols] pairs (None for v1 corpora) —
+        #: also what the checkpoint fingerprint digests, so a resumed fit
+        #: transitively pins the corpus *content*
+        self.checksums = ([[c["crc_values"], c["crc_cols"]]
+                           for c in self._chunks]
+                          if fmt == CORPUS_FORMAT else None)
+        self._validated: set = set()
+        if self.checksums is None:
+            warnings.warn(
+                f"{self.path}: legacy {_FORMAT_V1} corpus carries no shard "
+                "checksums; integrity cannot be verified (re-write with "
+                "write_corpus to upgrade)", UserWarning)
         if [(c["lo"], c["hi"]) for c in self._chunks] != self.schedule:
             raise ValueError(
                 f"{self.path / _META}: shard ranges disagree with the "
                 f"chunk_docs={self.chunk_docs} schedule")
 
     def load(self, i: int) -> SpCSR:
+        faults.fire("chunk-load", i)
         c = self._chunks[i]
         values = np.load(self.path / c["values"], mmap_mode="r")
         cols = np.load(self.path / c["cols"], mmap_mode="r")
+        if faults.should_fire("corrupt-shard", i):
+            # deterministic chaos: hand the validator a bit-flipped copy,
+            # as if the shard rotted on disk
+            values = np.array(values)
+            values.view(np.uint8).reshape(-1)[0] ^= 0xFF
+        if self.checksums is not None and i not in self._validated:
+            got = (_crc_array(values), _crc_array(cols))
+            want = tuple(self.checksums[i])
+            if got != want:
+                raise CorpusIntegrityError(
+                    f"{self.path}: shard {i} ({c['values']} / {c['cols']}) "
+                    f"checksum mismatch (stored crc32 {want}, got {got}); "
+                    "the corpus is corrupt — re-write it or restore from "
+                    "backup")
+            self._validated.add(i)
         return SpCSR(values, cols, (self.shape[0], c["hi"] - c["lo"]))
 
     @property
@@ -216,9 +287,13 @@ def write_corpus(a, out_dir, chunk_docs: Optional[int] = None,
     for i, (lo, hi) in enumerate(source.schedule):
         blk = source.load(i)
         vname, cname = f"shard-{i:05d}.values.npy", f"shard-{i:05d}.cols.npy"
-        np.save(out / vname, np.asarray(blk.values, dtype=dtype))
-        np.save(out / cname, np.asarray(blk.cols, dtype=np.int32))
-        chunks.append({"lo": lo, "hi": hi, "values": vname, "cols": cname})
+        values = np.asarray(blk.values, dtype=dtype)
+        cols = np.asarray(blk.cols, dtype=np.int32)
+        np.save(out / vname, values)
+        np.save(out / cname, cols)
+        chunks.append({"lo": lo, "hi": hi, "values": vname, "cols": cname,
+                       "crc_values": _crc_array(values),
+                       "crc_cols": _crc_array(cols)})
     meta = {"format": CORPUS_FORMAT, "n": n, "m": m, "cap": source.cap,
             "chunk_docs": w, "dtype": np.dtype(dtype).name, "chunks": chunks}
     (out / _META).write_text(json.dumps(meta, indent=1))
@@ -299,24 +374,44 @@ class Prefetcher:
     exceptions re-raise in the consumer; early exits (``close`` / context
     manager / ``tol`` early-stop breaking the loop) stop the worker without
     draining the corpus.
+
+    I/O failures inside ``pack`` (``OSError`` — a flaky mount, an evicted
+    page) are retried up to ``retries`` times with exponential backoff
+    (``retry_backoff * 2**attempt`` seconds) before giving up; exhaustion
+    raises :class:`ChunkPackError` carrying the failed item and schedule
+    position, chained to the original error.  Setting the environment
+    variable ``REPRO_STREAM_SKIP_BAD_CHUNKS=1`` downgrades exhaustion (and
+    non-I/O pack failures) to a warning and drops the chunk from the
+    stream — the fit survives on the remaining chunks, with accordingly
+    degraded results.  A worker that dies without reporting (the moral
+    equivalent of a segfault) is caught by a liveness watchdog on the
+    consumer side rather than hanging the fit.
     """
 
     _DONE = object()
+    _SKIPPED = object()
 
     def __init__(self, items: Sequence, pack: Callable, depth: int = 2,
-                 enabled: bool = True):
+                 enabled: bool = True, retries: int = 2,
+                 retry_backoff: float = 0.05):
         if depth <= 0:
             raise ValueError(f"prefetch depth must be positive, got {depth}")
+        if retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
         self._items = list(items)
         self._pack = pack
         self._enabled = bool(enabled)
+        self._retries = int(retries)
+        self._backoff = float(retry_backoff)
         #: instrumentation: ``packed`` items, ``max_queued`` high-water mark,
-        #: ``pack_s`` wall time inside ``pack`` (the ingest work), and
+        #: ``pack_s`` wall time inside ``pack`` (the ingest work),
         #: ``stall_s`` time the consumer spent blocked waiting for a chunk —
         #: ``1 - stall_s / pack_s`` is the fraction of ingest wall time the
         #: double-buffering hid under compute (bench_ingest's overlap gate)
+        #: — plus ``retries`` (I/O retry attempts) and ``skipped`` (chunks
+        #: dropped via the skip hatch)
         self.stats = {"packed": 0, "max_queued": 0, "pack_s": 0.0,
-                      "stall_s": 0.0}
+                      "stall_s": 0.0, "retries": 0, "skipped": 0}
         if not self._enabled:
             return
         self._q: queue.Queue = queue.Queue(maxsize=depth)
@@ -324,6 +419,50 @@ class Prefetcher:
         self._thread = threading.Thread(target=self._worker, daemon=True,
                                         name="repro-corpus-prefetch")
         self._thread.start()
+
+    def _pack_one(self, item, index: int):
+        """``pack(item)`` with bounded I/O retry; returns ``_SKIPPED`` when
+        the skip hatch swallows a failure."""
+        attempt = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                packed = self._pack(item)
+            except OSError as exc:
+                self.stats["pack_s"] += time.perf_counter() - t0
+                if attempt < self._retries:
+                    self.stats["retries"] += 1
+                    time.sleep(self._backoff * (2 ** attempt))
+                    attempt += 1
+                    continue
+                wrapped = ChunkPackError(
+                    f"chunk {item!r} (schedule position {index}) failed to "
+                    f"pack after {attempt + 1} attempt(s): {exc}",
+                    item=item, index=index)
+                if os.environ.get(SKIP_BAD_CHUNKS_ENV) == "1":
+                    self.stats["skipped"] += 1
+                    warnings.warn(
+                        f"{wrapped}; skipping it ({SKIP_BAD_CHUNKS_ENV}=1 — "
+                        "results degrade to the surviving chunks)",
+                        RuntimeWarning)
+                    return self._SKIPPED
+                raise wrapped from exc
+            except Exception as exc:
+                self.stats["pack_s"] += time.perf_counter() - t0
+                if os.environ.get(SKIP_BAD_CHUNKS_ENV) == "1":
+                    self.stats["skipped"] += 1
+                    warnings.warn(
+                        f"chunk {item!r} (schedule position {index}) failed "
+                        f"to pack: {exc}; skipping it ({SKIP_BAD_CHUNKS_ENV}"
+                        "=1 — results degrade to the surviving chunks)",
+                        RuntimeWarning)
+                    return self._SKIPPED
+                raise ChunkPackError(
+                    f"chunk {item!r} (schedule position {index}) failed to "
+                    f"pack: {exc}", item=item, index=index) from exc
+            self.stats["pack_s"] += time.perf_counter() - t0
+            self.stats["packed"] += 1
+            return packed
 
     def _put(self, payload) -> bool:
         """Queue ``payload`` unless the consumer has gone away."""
@@ -337,13 +476,14 @@ class Prefetcher:
 
     def _worker(self):
         try:
-            for item in self._items:
+            for index, item in enumerate(self._items):
                 if self._stop.is_set():
                     return
-                t0 = time.perf_counter()
-                packed = self._pack(item)
-                self.stats["pack_s"] += time.perf_counter() - t0
-                self.stats["packed"] += 1
+                if faults.should_fire("prefetch-worker", item):
+                    return  # injected silent death — no _DONE, no error
+                packed = self._pack_one(item, index)
+                if packed is self._SKIPPED:
+                    continue
                 if not self._put((packed, None)):
                     return
             self._put((self._DONE, None))
@@ -352,22 +492,32 @@ class Prefetcher:
 
     def __iter__(self):
         if not self._enabled:
-            for item in self._items:
+            for index, item in enumerate(self._items):
                 t0 = time.perf_counter()
-                packed = self._pack(item)
-                dt = time.perf_counter() - t0
-                self.stats["pack_s"] += dt
-                self.stats["stall_s"] += dt  # synchronous: all ingest stalls
-                self.stats["packed"] += 1
+                packed = self._pack_one(item, index)
+                self.stats["stall_s"] += time.perf_counter() - t0
+                if packed is self._SKIPPED:
+                    continue
                 yield packed
             return
         while True:
             self.stats["max_queued"] = max(self.stats["max_queued"],
                                            self._q.qsize())
             t0 = time.perf_counter()
-            packed, exc = self._q.get()
+            while True:
+                try:
+                    packed, exc = self._q.get(timeout=1.0)
+                    break
+                except queue.Empty:
+                    if not self._thread.is_alive():
+                        self._stop.set()
+                        raise RuntimeError(
+                            "prefetch worker died without reporting a "
+                            "result or an error; the stream cannot "
+                            "continue") from None
             self.stats["stall_s"] += time.perf_counter() - t0
             if exc is not None:
+                self._stop.set()  # the raise abandons the stream mid-flight
                 raise exc
             if packed is self._DONE:
                 return

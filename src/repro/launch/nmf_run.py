@@ -87,6 +87,7 @@ def nmf_dryrun_cell(mesh: jax.sharding.Mesh, *,
     out_shardings = NMFResult(
         u=NamedSharding(mesh, u_spec), v=NamedSharding(mesh, v_spec),
         residual=rep, error=rep, max_nnz=rep, nnz_u=rep, nnz_v=rep,
+        health=rep,
     )
     t0 = time.time()
     with set_mesh(mesh):
@@ -167,8 +168,21 @@ def main(argv=None):
                          "e.g. 2x2 (default 1x1); the inner per-shard "
                          "backend comes from --backend (jnp-csr / "
                          "pallas-bsr)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="PATH",
+                    help="periodic atomic fit snapshots land here "
+                         "(repro.robustness); a killed run restarted with "
+                         "--resume continues from the newest one")
+    ap.add_argument("--checkpoint-every", type=int, default=10,
+                    help="snapshot cadence: iterations (ALS family), "
+                         "chunks (streaming), or blocks (sequential)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest checkpoint in "
+                         "--checkpoint-dir (fingerprint-checked; refuses a "
+                         "mismatched config/corpus)")
     ap.add_argument("--small", action="store_true", help="1/8 scale")
     args = ap.parse_args(argv)
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume needs --checkpoint-dir")
 
     solver = ("streaming" if args.stream or args.corpus_dir
               else args.solver)
@@ -225,7 +239,10 @@ def main(argv=None):
         k=k, iters=iters, sparsity=sparsity, solver=solver,
         tol=args.tol, backend=args.backend, mesh_shape=mesh_shape,
         chunk_docs=chunk_docs, prefetch=not args.no_prefetch,
-        prefetch_depth=args.prefetch_depth))
+        prefetch_depth=args.prefetch_depth,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        resume=args.resume))
     t0 = time.time()
     model.fit(a)
     jax.block_until_ready(model.u_)

@@ -204,6 +204,24 @@ class NMFConfig:
     * ``prefetch_depth`` — max chunks the prefetcher queues ahead of the
       consumer; host memory for the stream is O(depth) chunks, never
       O(corpus).
+    * ``checkpoint_dir`` — directory for periodic atomic fit snapshots
+      (:class:`repro.robustness.FitCheckpointer`); ``None`` (default)
+      disables checkpointing.  Snapshots are saved gathered and restored
+      resharded, so a fit may resume on a different ``mesh_shape``.
+    * ``checkpoint_every`` — snapshot cadence: every N iterations for the
+      ALS-family solvers, every N chunks for ``"streaming"``, every N
+      topic blocks for ``"sequential"``.
+    * ``resume`` — start from the newest checkpoint in ``checkpoint_dir``
+      (fingerprint-checked; a mismatched config/corpus refuses with
+      :class:`repro.robustness.CheckpointMismatchError`).  With no
+      checkpoint present the fit starts fresh.
+    * ``on_unhealthy`` — what the solver driver does when the in-engine
+      health monitor flags non-finite factors / an exploding residual:
+      ``"rollback"`` (default) restores the last checkpoint (or the
+      initial guess) with reseed-perturbed RNG and re-runs,
+      ``"raise"`` fails fast with :class:`repro.robustness.FitHealthError`,
+      ``"ignore"`` keeps the legacy emit-NaNs behavior.
+    * ``max_rollbacks`` — rollback attempts before giving up and raising.
     """
 
     k: int = 5
@@ -220,6 +238,11 @@ class NMFConfig:
     chunk_docs: Optional[int] = None
     prefetch: bool = True
     prefetch_depth: int = 2
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 10
+    resume: bool = False
+    on_unhealthy: str = "rollback"
+    max_rollbacks: int = 3
 
     def __post_init__(self):
         if self.k <= 0:
@@ -266,6 +289,21 @@ class NMFConfig:
         if self.prefetch_depth <= 0:
             raise ValueError(
                 f"prefetch_depth must be positive, got {self.prefetch_depth}")
+        if self.checkpoint_every <= 0:
+            raise ValueError(
+                f"checkpoint_every must be positive, got "
+                f"{self.checkpoint_every}")
+        if self.resume and self.checkpoint_dir is None:
+            raise ValueError(
+                "resume=True needs checkpoint_dir to resume from")
+        if self.on_unhealthy not in ("rollback", "raise", "ignore"):
+            raise ValueError(
+                f"on_unhealthy must be 'rollback', 'raise', or 'ignore', "
+                f"got {self.on_unhealthy!r}")
+        if self.max_rollbacks < 0:
+            raise ValueError(
+                f"max_rollbacks must be non-negative, got "
+                f"{self.max_rollbacks}")
         jnp.dtype(self.dtype)  # fail fast on bad dtype names
 
     @property

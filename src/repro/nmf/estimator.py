@@ -83,6 +83,9 @@ class EnforcedNMF:
         self.n_iter_: int = 0
         self.n_features_: Optional[int] = None
         self.n_docs_seen_: int = 0
+        # first unhealthy inner pass of the latest online step (-1 = ok);
+        # the streaming solver reads this at checkpoint boundaries
+        self.health_ = jnp.int32(-1)
         # reference document count for scaling absolute t_v budgets in
         # transform, and online-ALS sufficient statistics for partial_fit
         self._m_ref: Optional[int] = None
@@ -155,7 +158,8 @@ class EnforcedNMF:
 
     # -- fitting -------------------------------------------------------------
 
-    def fit(self, a: ArrayLike, u0: Optional[jax.Array] = None) -> "EnforcedNMF":
+    def fit(self, a: ArrayLike, u0: Optional[jax.Array] = None,
+            resume: Optional[bool] = None) -> "EnforcedNMF":
         """Factorize ``a`` with the configured solver.  ``u0`` overrides the
         seeded default initial guess (shape (n, k); the sequential solver
         also accepts the (n, block_size) block shape).
@@ -165,10 +169,17 @@ class EnforcedNMF:
         :class:`~repro.data.corpus.MmapCorpus`, or any
         :class:`~repro.data.corpus.ChunkSource` — chunks stream off disk
         (double-buffered against compute per ``config.prefetch``) and host
-        memory stays O(chunk), never O(corpus)."""
+        memory stays O(chunk), never O(corpus).
+
+        ``resume`` overrides ``config.resume`` for this call: with a
+        ``config.checkpoint_dir`` holding a snapshot of this same run, the
+        fit continues from it instead of starting over (see
+        :mod:`repro.robustness`)."""
         from repro.data.corpus import as_chunk_source, is_corpus_input
 
         cfg = self.config
+        if resume is not None:
+            cfg = cfg.replace(resume=bool(resume))
         streamed = is_corpus_input(a)
         if streamed:
             if cfg.solver != "streaming":
@@ -337,6 +348,7 @@ class EnforcedNMF:
 
         self.u_, self.v_ = res.u, res.v
         self._av_acc, self._gv_acc = res.stats.av, res.stats.gv
+        self.health_ = res.health
         self.n_docs_seen_ += mc
         return self
 

@@ -14,6 +14,8 @@ through accumulated sufficient statistics, locally or mesh-reduced.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,11 +23,13 @@ import numpy as np
 from repro.core.nmf import (
     Matrix, _matmul_t, _relative_error, als_nmf, solve_gram,
 )
-from repro.core.sequential import sequential_als_nmf
+from repro.core.sequential import SequentialResult, sequential_als_nmf
 from repro.kernels.bsr import BSROperand
 from repro.nmf.config import NMFConfig
 from repro.nmf.registry import register_solver
 from repro.nmf.result import FitResult
+from repro.robustness import faults
+from repro.robustness.snapshot import FitCheckpointer, FitHealthError
 
 __all__ = ["solve_als", "solve_enforced", "solve_sequential",
            "solve_distributed", "solve_streaming", "dist_budget",
@@ -81,29 +85,183 @@ def mesh_inner_backend(config: NMFConfig, a: Matrix) -> str:
             else "jnp-csr")
 
 
-def _run_chunked(run, config: NMFConfig, u0: jax.Array,
-                 solver_name: str) -> FitResult:
-    """Drive ``run(u_init, iters) -> NMFResult`` with the shared early-stop
-    protocol.  Every ALS-family execution mode (local backends and the
-    sharded mesh engine) goes through here, so ``tol`` semantics are
-    defined once."""
-    if config.tol <= 0.0:
-        return FitResult.from_nmf_result(run(u0, config.iters), solver_name)
+def _history_meta(parts) -> dict:
+    """Host-side JSON view of the per-iteration histories accumulated so
+    far — what a checkpoint's manifest carries so a resumed fit's
+    ``FitResult`` covers the pre-crash iterations too."""
+    def cat(field):
+        return np.concatenate(
+            [np.asarray(jax.device_get(getattr(p, field))) for p in parts]
+        ).tolist()
 
-    # Early stop: run in compiled chunks, checking the relative residual on
-    # the host between chunks.  The engine recomputes V from U at the top of
-    # every iteration, so restarting a chunk from the previous chunk's U is
-    # exactly equivalent to one long run.
+    if not parts:
+        return {"residual": [], "error": [], "nnz_u": [], "nnz_v": [],
+                "max_nnz": 0}
+    return {
+        "residual": cat("residual"),
+        "error": cat("error"),
+        "nnz_u": [int(x) for x in cat("nnz_u")],
+        "nnz_v": [int(x) for x in cat("nnz_v")],
+        "max_nnz": max(int(p.max_nnz) for p in parts),
+    }
+
+
+def _part_from_saved(hist: dict, solver_name: str) -> FitResult:
+    """Rebuild the pre-crash history as a synthetic first ``FitResult``
+    part.  Its factors are ``None`` — only the *last* part's factors are
+    ever read by :meth:`FitResult.concatenate`, matching how the tol-chunk
+    loop already treats intermediate parts (their ``u`` buffers are
+    donated into the next chunk)."""
+    residual = jnp.asarray(hist["residual"], jnp.float32)
+    return FitResult(
+        u=None, v=None, residual=residual,
+        error=jnp.asarray(hist["error"], jnp.float32),
+        max_nnz=jnp.int32(hist["max_nnz"]),
+        solver=solver_name, n_iter=int(residual.shape[0]),
+        nnz_u=jnp.asarray(hist["nnz_u"], jnp.int32),
+        nnz_v=jnp.asarray(hist["nnz_v"], jnp.int32),
+    )
+
+
+def _reseed_perturb(host_u, seed: int, attempt: int) -> jax.Array:
+    """Rollback restart point: the restored (clean) factor with a small
+    multiplicative jitter from a reseeded key — zeros stay zero (the
+    sparsity structure survives) but the trajectory leaves the basin that
+    went unstable.  ``attempt`` folds into the key so every retry explores
+    a different perturbation."""
+    u = jnp.asarray(host_u)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), 1 + attempt)
+    scale = jax.random.uniform(key, u.shape, dtype=u.dtype,
+                               minval=0.9, maxval=1.1)
+    return u * scale
+
+
+def _run_chunked(run, config: NMFConfig, u0: jax.Array, solver_name: str,
+                 ckpt: FitCheckpointer = None, place=None,
+                 u0_src=None) -> FitResult:
+    """Drive ``run(u_init, iters) -> NMFResult`` with the shared early-stop
+    + checkpoint/resume + health-rollback protocol.  Every ALS-family
+    execution mode (local backends and the sharded mesh engine) goes
+    through here, so the semantics are defined once.
+
+    The engine recomputes V from U at the top of every iteration, so
+    restarting a chunk from a previous chunk's U — whether for ``tol``
+    checking, a checkpoint boundary, or a post-crash resume — is exactly
+    equivalent to one long run.
+
+    * ``ckpt`` — optional :class:`FitCheckpointer`; snapshots ``u`` plus
+      the host-side histories every ``checkpoint_every`` iterations and
+      seeds the resume path.
+    * ``place`` — maps a restored host array onto the run's device/sharding
+      (mesh runs pass a fresh-copy ``device_put``; default ``jnp.asarray``).
+      Restoring through ``place`` is what makes restarts *elastic*: the
+      snapshot is saved gathered, and whatever mesh the resumed process has
+      receives it resharded.
+    * ``u0_src`` — a never-donated reference to the initial guess, the
+      rollback target when no checkpoint exists yet (the mesh engine
+      donates the ``u0`` actually passed to ``run``).
+    """
+    place = jnp.asarray if place is None else place
+    u0_src = u0 if u0_src is None else u0_src
+    total = config.iters
+
     parts, u, done, converged = [], u0, 0, False
-    while done < config.iters:
-        step = min(_TOL_CHUNK, config.iters - done)
-        res = run(u, step)
+    mark = (0, 0)  # (iterations done, len(parts)) at the last good snapshot
+    if ckpt is not None and config.resume:
+        saved = ckpt.resume()
+        if saved is not None:
+            done, arrays, meta = saved
+            if done >= total:
+                raise ValueError(
+                    f"checkpoint at {ckpt.ckpt_dir} already holds {done} "
+                    f"iterations but config.iters is {total}; raise iters "
+                    "(the fingerprint ignores it) to continue the run")
+            u = place(arrays["u"])
+            parts = [_part_from_saved(meta["history"], solver_name)]
+            mark = (done, 1)
+
+    if config.tol > 0.0:
+        step_base = (_TOL_CHUNK if ckpt is None
+                     else min(_TOL_CHUNK, ckpt.every))
+    else:
+        step_base = total if ckpt is None else ckpt.every
+
+    rollbacks = 0
+    while done < total:
+        step = min(step_base, total - done)
+        res = run(faults.poison("poison-step", done, u), step)
+        if config.on_unhealthy != "ignore" and int(res.health) >= 0:
+            bad_at = done + int(res.health)
+            if (config.on_unhealthy == "raise"
+                    or rollbacks >= config.max_rollbacks):
+                raise FitHealthError(
+                    f"{solver_name} fit went unhealthy (non-finite factors "
+                    f"or exploding residual) at iteration {bad_at}"
+                    + ("" if config.on_unhealthy == "raise" else
+                       f"; gave up after {rollbacks} rollback(s)"))
+            rollbacks += 1
+            done, nparts = mark
+            parts = parts[:nparts]
+            if ckpt is not None and ckpt.last is not None:
+                host_u = ckpt.last[1]["u"]
+            else:
+                host_u = jax.device_get(u0_src)
+            u = place(_reseed_perturb(host_u, config.seed, rollbacks))
+            warnings.warn(
+                f"{solver_name} fit went unhealthy at iteration {bad_at}; "
+                f"rolling back to iteration {done} with reseeded RNG "
+                f"(attempt {rollbacks}/{config.max_rollbacks})",
+                RuntimeWarning)
+            continue
         parts.append(FitResult.from_nmf_result(res, solver_name))
         u, done = res.u, done + step
-        if float(res.residual[-1]) <= config.tol:
+        if ckpt is not None and ckpt.due(done, total):
+            ckpt.save(done, {"u": u}, history=_history_meta(parts))
+            mark = (done, len(parts))
+        if config.tol > 0.0 and float(res.residual[-1]) <= config.tol:
             converged = True
             break
     return FitResult.concatenate(parts, converged=converged)
+
+
+def _demote_operand(a: Matrix) -> Matrix:
+    """The jnp-csr view of a Pallas-path operand, for the kernel-failure
+    fallback: BSR tile grids unpack through the element COO (work
+    proportional to stored nonzeros, never a dense materialization);
+    everything else already is a csr-compatible operand."""
+    if isinstance(a, BSROperand):
+        from repro.kernels.bsr import bsr_to_coo
+        from repro.sparse.csr import from_coo
+
+        rows, cols, vals = bsr_to_coo(a.bsr)
+        return from_coo(rows, cols, vals, a.shape)
+    return a
+
+
+def _with_kernel_fallback(run, a: Matrix, config: NMFConfig, make_run):
+    """Graceful degradation for the Pallas path: if kernel dispatch fails
+    (hardware without the required MXU support, a lowering bug, an
+    injected ``"pallas-dispatch"`` fault), re-run the fit on the jnp-csr
+    reference backend with a single warning instead of killing it.  The
+    fallback is sticky for the rest of the fit; checkpoints stay valid
+    across it because the resume fingerprint deliberately ignores the
+    backend."""
+    state = {"fallback": None}
+
+    def guarded(u_init, iters):
+        if state["fallback"] is None:
+            try:
+                faults.fire("pallas-dispatch")
+                return run(u_init, iters)
+            except Exception as exc:  # noqa: BLE001 — any dispatch failure degrades
+                warnings.warn(
+                    f"pallas-bsr kernel dispatch failed ({exc!r}); falling "
+                    "back to the jnp-csr backend for this fit",
+                    RuntimeWarning)
+                state["fallback"] = make_run(_demote_operand(a), "jnp-csr")
+        return state["fallback"](u_init, iters)
+
+    return guarded
 
 
 def _als_family(a: Matrix, config: NMFConfig, u0: jax.Array,
@@ -111,19 +269,29 @@ def _als_family(a: Matrix, config: NMFConfig, u0: jax.Array,
     from repro.backend import resolve_backend
 
     n, m = a.shape
-    # fuse the relu+threshold epilogue into one Pallas pass when the
-    # backend asks for it (the jnp backends keep the legacy two-pass
-    # epilogue so legacy results stay bit-for-bit)
-    fused = resolve_backend(a, config.backend).fuse_epilogue
-    sp_u = config.sparsity.sparsifier(n, config.k, "u", fused=fused)
-    sp_v = config.sparsity.sparsifier(m, config.k, "v", fused=fused)
 
-    def run(u_init, iters):
-        return als_nmf(a, u_init, iters=iters, sparsify_u=sp_u,
-                       sparsify_v=sp_v, track_error=config.track_error,
-                       backend=config.backend)
+    def make_run(operand, backend):
+        # fuse the relu+threshold epilogue into one Pallas pass when the
+        # backend asks for it (the jnp backends keep the legacy two-pass
+        # epilogue so legacy results stay bit-for-bit) — resolved per
+        # operand/backend pair so the kernel-failure fallback rebuilds
+        # *unfused* sparsifiers along with the csr matmuls
+        fused = resolve_backend(operand, backend).fuse_epilogue
+        sp_u = config.sparsity.sparsifier(n, config.k, "u", fused=fused)
+        sp_v = config.sparsity.sparsifier(m, config.k, "v", fused=fused)
 
-    return _run_chunked(run, config, u0, solver_name)
+        def run(u_init, iters):
+            return als_nmf(operand, u_init, iters=iters, sparsify_u=sp_u,
+                           sparsify_v=sp_v, track_error=config.track_error,
+                           backend=backend)
+
+        return run
+
+    run = make_run(a, config.backend)
+    if resolve_backend(a, config.backend).name.startswith("pallas-bsr"):
+        run = _with_kernel_fallback(run, a, config, make_run)
+    ckpt = FitCheckpointer.from_config(config, a)
+    return _run_chunked(run, config, u0, solver_name, ckpt=ckpt)
 
 
 @register_solver("als")
@@ -161,14 +329,64 @@ def solve_sequential(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
             f"sequential solver needs u0 with {k2} (block_size) or "
             f"{config.k} (k) columns, got {u0.shape[1]}")
     n, m = a.shape
-    res = sequential_als_nmf(
-        a, u0, k2=k2, blocks=blocks, iters=config.iters,
+    common = dict(
+        k2=k2, iters=config.iters,
         t_u=config.sparsity.resolve(n, k2, "u"),
         t_v=config.sparsity.resolve(m, k2, "v"),
         track_error=config.track_error,
         backend=config.backend,
     )
-    return FitResult.from_sequential_result(res)
+    ckpt = FitCheckpointer.from_config(config, a)
+    if ckpt is None:
+        res = sequential_als_nmf(a, u0, blocks=blocks, **common)
+        return FitResult.from_sequential_result(res)
+
+    # Checkpointing: converge checkpoint_every-block groups per compiled
+    # call, snapshotting the zero-padded carried factors between groups.
+    # Each block update reads only (a, u0, U1, V1), so a resumed group is
+    # exactly the computation the uninterrupted scan would have run.
+    done = 0
+    u1 = v1 = None
+    rs_parts, es_parts, mn_parts = [], [], []
+    if config.resume:
+        saved = ckpt.resume()
+        if saved is not None:
+            done, arrays, meta = saved
+            if done >= blocks:
+                raise ValueError(
+                    f"checkpoint at {ckpt.ckpt_dir} already holds all "
+                    f"{done} converged blocks; nothing to resume")
+            u1, v1 = jnp.asarray(arrays["u"]), jnp.asarray(arrays["v"])
+            hist = meta["history"]
+            rs_parts = [np.asarray(hist["residual"], np.float32)
+                        .reshape(done, config.iters)]
+            es_parts = [np.asarray(hist["error"], np.float32)]
+            mn_parts = [int(hist["max_nnz"])]
+    while done < blocks:
+        nb = min(ckpt.every, blocks - done)
+        res = sequential_als_nmf(a, u0, blocks=nb, total_blocks=blocks,
+                                 carry_u=u1, carry_v=v1, start_block=done,
+                                 **common)
+        u1, v1 = res.u, res.v
+        rs_parts.append(np.asarray(jax.device_get(res.residual)))
+        es_parts.append(np.asarray(jax.device_get(res.error)))
+        mn_parts.append(int(res.max_nnz))
+        done += nb
+        if ckpt.due(done, blocks):
+            ckpt.save(done, {"u": u1, "v": v1}, history={
+                "residual": np.concatenate(
+                    [r.reshape(-1) for r in rs_parts]).tolist(),
+                "error": np.concatenate(es_parts).tolist(),
+                "max_nnz": max(mn_parts),
+            })
+    seq = SequentialResult(
+        u=u1, v=v1,
+        residual=jnp.asarray(np.concatenate(
+            [np.asarray(r).reshape(-1, config.iters) for r in rs_parts])),
+        error=jnp.asarray(np.concatenate(es_parts)),
+        max_nnz=jnp.int32(max(mn_parts)),
+    )
+    return FitResult.from_sequential_result(seq)
 
 
 def _make_packer(model):
@@ -206,6 +424,27 @@ def _fold_in_streamed(model, source, config: NMFConfig) -> jax.Array:
             parts.append(_matmul_t(chunk, u))
     v = solve_gram(gram, jnp.concatenate(parts, axis=0))
     return model._enforce_v(jnp.maximum(v, 0.0))
+
+
+def _restore_stream_state(model, ckpt, u0, config: NMFConfig, attempt: int):
+    """Roll the streaming estimator back to the last good snapshot (or the
+    initial guess) with a reseed-perturbed factor; returns the restored
+    running ``max_nnz``.  The accumulators restore exactly — they are
+    stream statistics, not functions of ``u`` — so replaying the chunks
+    since the snapshot is the same computation the uninterrupted stream
+    would have run."""
+    if ckpt is not None and ckpt.last is not None:
+        _, arrays, meta = ckpt.last
+        model.u_ = _reseed_perturb(arrays["u"], config.seed, attempt)
+        model._av_acc = jnp.asarray(arrays["av"])
+        model._gv_acc = jnp.asarray(arrays["gv"])
+        model.n_docs_seen_ = int(meta["n_docs_seen"])
+        return jnp.int32(meta["history"]["max_nnz"])
+    model.u_ = _reseed_perturb(jax.device_get(u0), config.seed, attempt)
+    model._av_acc = None
+    model._gv_acc = None
+    model.n_docs_seen_ = 0
+    return jnp.sum(model.u_ != 0).astype(jnp.int32)
 
 
 @register_solver("streaming")
@@ -255,40 +494,112 @@ def solve_streaming(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
             "backend, pallas-bsr included)")
     source = as_chunk_source(a, chunk_docs=config.chunk_docs)
     n, m = source.shape
+    n_chunks = len(source.schedule)
     model = EnforcedNMF(config)
     model.u_ = u0
     model.n_features_ = n
     model._m_ref = m  # t_v budgets are full-corpus; chunks rescale
     pack = _make_packer(model)
+    ckpt = FitCheckpointer.from_config(config, source)
 
     # per-chunk metrics stay device scalars — only the tol check forces a
-    # host sync, so with tol=0 chunk dispatches pipeline freely
+    # host sync, so with tol=0 chunk dispatches pipeline freely.  Health
+    # is synced only at checkpoint boundaries and stream end (NaNs are
+    # sticky through the accumulators, so a later check still catches an
+    # earlier poisoning) — and always *before* a snapshot commits, so a
+    # checkpoint is never poisoned.
     residuals, errors, nnz_us, nnz_vs = [], [], [], []
     max_nnz = jnp.sum(u0 != 0).astype(jnp.int32)
     converged = False
-    with Prefetcher(range(len(source.schedule)),
-                    lambda i: pack(source.load(i)),
-                    depth=config.prefetch_depth,
-                    enabled=config.prefetch) as stream:
-        for packed in stream:
-            chunk = packed.host if isinstance(packed, PackedChunk) else packed
-            u_prev = model.u_
-            model.partial_fit(packed)
-            u, v = model.u_, model.v_
-            num = jnp.linalg.norm(u - u_prev)
-            den = jnp.maximum(jnp.linalg.norm(u), 1e-30)
-            r = num / den
-            residuals.append(r)
-            errors.append(_relative_error(chunk, u, v) if config.track_error
-                          else jnp.float32(0.0))
-            nu = jnp.sum(u != 0).astype(jnp.int32)
-            nv = jnp.sum(v != 0).astype(jnp.int32)
-            nnz_us.append(nu)
-            nnz_vs.append(nv)
-            max_nnz = jnp.maximum(max_nnz, nu + nv)
-            if config.tol > 0.0 and float(r) <= config.tol:
-                converged = True
-                break
+    start = 0
+    mark = (0, 0)  # (chunks done, metrics length) at the last good snapshot
+    if ckpt is not None and config.resume:
+        saved = ckpt.resume()
+        if saved is not None:
+            start, arrays, meta = saved
+            if start >= n_chunks:
+                raise ValueError(
+                    f"checkpoint at {ckpt.ckpt_dir} already covers all "
+                    f"{start} chunks; nothing to resume")
+            hist = meta["history"]
+            model.u_ = jnp.asarray(arrays["u"])
+            model._av_acc = jnp.asarray(arrays["av"])
+            model._gv_acc = jnp.asarray(arrays["gv"])
+            model.n_docs_seen_ = int(meta["n_docs_seen"])
+            residuals = [np.float32(x) for x in hist["residual"]]
+            errors = [np.float32(x) for x in hist["error"]]
+            nnz_us = [np.int32(x) for x in hist["nnz_u"]]
+            nnz_vs = [np.int32(x) for x in hist["nnz_v"]]
+            max_nnz = jnp.int32(hist["max_nnz"])
+            mark = (start, len(residuals))
+
+    rollbacks = 0
+    replay = True
+    while replay:
+        replay = False
+        with Prefetcher(range(start, n_chunks),
+                        lambda i: pack(source.load(i)),
+                        depth=config.prefetch_depth,
+                        enabled=config.prefetch) as stream:
+            for idx, packed in zip(range(start, n_chunks), stream):
+                chunk = (packed.host if isinstance(packed, PackedChunk)
+                         else packed)
+                u_prev = model.u_
+                model.u_ = faults.poison("poison-step", idx, model.u_)
+                model.partial_fit(packed)
+                u, v = model.u_, model.v_
+                num = jnp.linalg.norm(u - u_prev)
+                den = jnp.maximum(jnp.linalg.norm(u), 1e-30)
+                r = num / den
+                residuals.append(r)
+                errors.append(_relative_error(chunk, u, v)
+                              if config.track_error else jnp.float32(0.0))
+                nu = jnp.sum(u != 0).astype(jnp.int32)
+                nv = jnp.sum(v != 0).astype(jnp.int32)
+                nnz_us.append(nu)
+                nnz_vs.append(nv)
+                max_nnz = jnp.maximum(max_nnz, nu + nv)
+                done = idx + 1
+                boundary = ckpt is not None and ckpt.due(done, n_chunks)
+                if ((boundary or done == n_chunks)
+                        and config.on_unhealthy != "ignore"
+                        and int(model.health_) >= 0):
+                    if (config.on_unhealthy == "raise"
+                            or rollbacks >= config.max_rollbacks):
+                        raise FitHealthError(
+                            f"streaming fit went unhealthy by chunk {idx}"
+                            + ("" if config.on_unhealthy == "raise" else
+                               f"; gave up after {rollbacks} rollback(s)"))
+                    rollbacks += 1
+                    start, keep = mark
+                    del residuals[keep:], errors[keep:]
+                    del nnz_us[keep:], nnz_vs[keep:]
+                    max_nnz = _restore_stream_state(
+                        model, ckpt, u0, config, rollbacks)
+                    warnings.warn(
+                        f"streaming fit went unhealthy by chunk {idx}; "
+                        f"rolling back to chunk {start} with reseeded RNG "
+                        f"(attempt {rollbacks}/{config.max_rollbacks})",
+                        RuntimeWarning)
+                    replay = True
+                    break
+                if boundary:
+                    ckpt.save(
+                        done,
+                        {"u": model.u_, "av": model._av_acc,
+                         "gv": model._gv_acc},
+                        history={
+                            "residual": [float(x) for x in residuals],
+                            "error": [float(x) for x in errors],
+                            "nnz_u": [int(x) for x in nnz_us],
+                            "nnz_v": [int(x) for x in nnz_vs],
+                            "max_nnz": int(max_nnz),
+                        },
+                        n_docs_seen=int(model.n_docs_seen_))
+                    mark = (done, len(residuals))
+                if config.tol > 0.0 and float(r) <= config.tol:
+                    converged = True
+                    break
 
     # frozen-U fold-in: the corpus loadings, streamed chunk-wise
     v_full = _fold_in_streamed(model, source, config)
@@ -355,14 +666,20 @@ def solve_distributed(a: Matrix, config: NMFConfig, u0: jax.Array) -> FitResult:
     )
     _, u_spec, _ = engine.specs
     dist = engine.distribute(a)
-    # the jitted step donates its u argument (in-place factor rotation);
-    # device_put may alias the caller's buffer, so hand it a real copy —
-    # one (n, k) allocation per fit, not per iteration
-    u0 = jax.device_put(jnp.array(u0, copy=True),
-                        NamedSharding(mesh, u_spec))
+
+    def place(x):
+        # the jitted step donates its u argument (in-place factor
+        # rotation); device_put may alias the source buffer, so hand it a
+        # real copy — one (n, k) allocation per fit / restore, not per
+        # iteration.  Restored checkpoints (saved gathered) land here too,
+        # resharded onto whatever mesh this process has — elastic restart.
+        return jax.device_put(jnp.array(x, copy=True),
+                              NamedSharding(mesh, u_spec))
 
     def run(u_init, iters):
         with set_mesh(mesh):
             return engine(dist, u_init, iters)
 
-    return _run_chunked(run, config, u0, "distributed")
+    ckpt = FitCheckpointer.from_config(config, a)
+    return _run_chunked(run, config, place(u0), "distributed", ckpt=ckpt,
+                        place=place, u0_src=u0)

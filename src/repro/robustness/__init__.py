@@ -1,0 +1,33 @@
+"""Fault tolerance for long-running fits.
+
+Three cooperating pieces (see ISSUE/README "Fault tolerance"):
+
+* :mod:`repro.robustness.snapshot` — :class:`FitCheckpointer`: periodic
+  atomic snapshots with a config+data fingerprint, resume that refuses a
+  mismatched run, and the in-memory last-good state the health guard rolls
+  back to.
+* :mod:`repro.robustness.faults` — the deterministic fault-injection
+  registry the chaos test suite drives (fail a chunk load once, corrupt a
+  shard, NaN-poison a step, kill the prefetch worker, kill the process at
+  a checkpoint commit).
+* The engines themselves carry a jit-compatible health monitor (the
+  ``health`` field of ``NMFResult`` / ``OnlineStepResult``): the first
+  iteration whose factors went non-finite or whose residual exploded, or
+  ``-1`` for a healthy run.  The solver drivers read it at chunk/boundary
+  sync points and roll back to the last checkpoint with reseeded RNG
+  instead of emitting NaN topics.
+"""
+from repro.robustness.faults import (
+    Fault, InjectedFault, InjectedIOError, KILL_EXIT,
+)
+from repro.robustness.snapshot import (
+    CheckpointMismatchError, FitCheckpointer, FitHealthError,
+    config_fingerprint, data_fingerprint,
+)
+from repro.robustness import faults
+
+__all__ = [
+    "CheckpointMismatchError", "Fault", "FitCheckpointer", "FitHealthError",
+    "InjectedFault", "InjectedIOError", "KILL_EXIT", "config_fingerprint",
+    "data_fingerprint", "faults",
+]

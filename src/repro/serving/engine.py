@@ -11,6 +11,7 @@ step == one ``decode_step`` over the whole slot batch.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -27,6 +28,9 @@ class Request:
     prompt: List[int]
     max_new: int = 32
     out: Optional[List[int]] = None
+    #: set when admission rejects the request (malformed prompt) — the
+    #: serving-layer 400; the engine tick keeps going for everyone else
+    error: Optional[str] = None
 
 
 class ServingEngine:
@@ -59,17 +63,47 @@ class ServingEngine:
         req.out = []
         self.queue.append(req)
 
+    def _validate(self, req: Request) -> Optional[str]:
+        """The request's rejection reason, or None when it is admissible."""
+        try:
+            toks = [int(t) for t in req.prompt]
+        except (TypeError, ValueError):
+            return "prompt is not a sequence of token ids"
+        if not toks:
+            return "empty prompt"
+        vocab = getattr(self.cfg, "vocab", None)
+        if vocab is not None and any(t < 0 or t >= vocab for t in toks):
+            return f"prompt token out of vocabulary range [0, {vocab})"
+        if req.max_new <= 0:
+            return f"max_new must be positive, got {req.max_new}"
+        if req.max_new >= self.max_seq:
+            return (f"max_new={req.max_new} leaves no room for the prompt "
+                    f"(max_seq={self.max_seq})")
+        return None
+
     def _admit(self):
         for i in range(self.max_batch):
             if self.slots[i] is None and self.queue:
                 req = self.queue.pop(0)
-                self.slots[i] = req
+                reason = self._validate(req)
+                if reason is not None:
+                    # reject this request alone — a malformed prompt must
+                    # not kill the tick loop (an engine-level failure inside
+                    # prefill/decode still propagates; that is not a
+                    # per-request problem)
+                    req.error = reason
+                    req.out = req.out if req.out is not None else []
+                    warnings.warn(
+                        f"request {req.rid} rejected: {reason}",
+                        RuntimeWarning)
+                    continue
                 # prefill: teacher-forced forward over the prompt, then seed
                 # the slot cache token-by-token (simple, correct; a fused
                 # prefill-into-slot kernel is the production path).
                 toks = req.prompt[: self.max_seq - req.max_new]
                 for t, tok in enumerate(toks):
-                    logits, self.cache = self._step_one(i, tok, t)
+                    logits, self.cache = self._step_one(i, int(tok), t)
+                self.slots[i] = req
                 self.pos[i] = len(toks)
                 self.last_token[i] = int(jnp.argmax(logits[i]))
                 self.remaining[i] = req.max_new

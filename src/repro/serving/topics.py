@@ -19,6 +19,8 @@ shard_mapped over the device grid.
 from __future__ import annotations
 
 import dataclasses
+import math
+import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -39,6 +41,10 @@ class TopicRequest:
     top: int = 3
     #: result — [(topic_id, loading), ...], strongest first
     topics: Optional[List[Tuple[int, float]]] = None
+    #: set instead of ``topics`` when the request is malformed (the
+    #: serving-layer 400): the request is answered and excluded from the
+    #: fold-in buffer, and the rest of its batch serves normally
+    error: Optional[str] = None
 
 
 class TopicServer:
@@ -68,6 +74,10 @@ class TopicServer:
         self.served = 0
         self.refresh_every = refresh_every
         self.refreshed = 0
+        #: requests answered with an ``error`` instead of topics
+        self.rejected = 0
+        #: refresh attempts rolled back (exception or unhealthy factors)
+        self.refresh_failures = 0
         #: served documents awaiting the next model refresh (bounded;
         #: oldest documents age out once past refresh_buffer).  An
         #: auto-refresh threshold implies at least that much buffer, or
@@ -77,6 +87,29 @@ class TopicServer:
 
     def submit(self, req: TopicRequest):
         self.queue.append(req)
+
+    def _validate(self, req: TopicRequest) -> Optional[str]:
+        """The request's 400 reason, or None when it is servable.  Checked
+        per request so one malformed document cannot poison its batch's
+        packed matrix or kill the serving tick."""
+        try:
+            pairs = list(req.terms)
+        except TypeError:
+            return f"terms is not iterable ({type(req.terms).__name__})"
+        if not pairs:
+            return "empty document (no terms)"
+        for entry in pairs:
+            try:
+                term, weight = entry
+                term, weight = int(term), float(weight)
+            except (TypeError, ValueError):
+                return f"term entry {entry!r} is not a (term_id, weight) pair"
+            if not math.isfinite(weight):
+                return f"term {term} has non-finite weight {weight!r}"
+        if not any(0 <= int(t) < self.n_terms for t, _ in pairs):
+            return (f"no term id falls inside the model vocabulary "
+                    f"[0, {self.n_terms})")
+        return None
 
     def _pack_terms(self, term_lists: Sequence[Sequence[Tuple[int, float]]]):
         """Bag-of-words term lists -> one (n_terms, n_docs) padded-CSR
@@ -100,13 +133,39 @@ class TopicServer:
         estimator with one ``partial_fit`` — continuous topic-model refresh
         over the live traffic.  Returns the number of documents folded in
         (0 when the buffer is empty).  ``iters`` / ``forget`` pass through
-        to :meth:`repro.nmf.EnforcedNMF.partial_fit`."""
+        to :meth:`repro.nmf.EnforcedNMF.partial_fit`.
+
+        The update is transactional: the pre-refresh factors and streaming
+        accumulators are snapshotted first, and an update that throws or
+        leaves the model unhealthy (non-finite factors — ``health_ >= 0``)
+        is rolled back, the documents are re-buffered for the next attempt,
+        and the server keeps serving on the last good topic space
+        (``refresh_failures`` counts these)."""
         if not self._refresh_buf:
             return 0
         docs = list(self._refresh_buf)
         self._refresh_buf.clear()
-        self.estimator.partial_fit(self._pack_terms(docs), iters=iters,
-                                   forget=forget)
+        est = self.estimator
+        snap = {name: getattr(est, name, None)
+                for name in ("u_", "v_", "_av_acc", "_gv_acc",
+                             "n_docs_seen_", "health_")}
+        try:
+            est.partial_fit(self._pack_terms(docs), iters=iters,
+                            forget=forget)
+            if int(getattr(est, "health_", -1)) >= 0:
+                raise RuntimeError(
+                    "partial_fit produced non-finite factors "
+                    f"(health_={int(est.health_)})")
+        except Exception as exc:
+            for name, val in snap.items():
+                setattr(est, name, val)
+            self._refresh_buf.extend(docs)  # retry on the next refresh
+            self.refresh_failures += 1
+            warnings.warn(
+                f"topic refresh over {len(docs)} document(s) failed and was "
+                f"rolled back; serving continues on the previous topic "
+                f"space ({exc})", RuntimeWarning)
+            return 0
         self.refreshed += len(docs)
         return len(docs)
 
@@ -115,12 +174,25 @@ class TopicServer:
         if not self.queue:
             return {}
         batch, self.queue = self.queue[: self.max_batch], self.queue[self.max_batch:]
-        a_new = self._pack_terms([req.terms for req in batch])
+        out = {}
+        good = []
+        for req in batch:
+            reason = self._validate(req)
+            if reason is None:
+                good.append(req)
+            else:
+                req.error = reason
+                req.topics = []
+                out[req.rid] = []
+                self.rejected += 1
+        if not good:
+            self.served += len(batch)
+            return out
+        a_new = self._pack_terms([req.terms for req in good])
         v = self.estimator.transform(a_new)          # (batch, k)
         order = np.asarray(jnp.argsort(-v, axis=1))
         v_np = np.asarray(v)
-        out = {}
-        for doc, req in enumerate(batch):
+        for doc, req in enumerate(good):
             picks = [
                 (int(t), float(v_np[doc, t]))
                 for t in order[doc, : req.top]
@@ -129,7 +201,7 @@ class TopicServer:
             req.topics = picks
             out[req.rid] = picks
         self.served += len(batch)
-        self._refresh_buf.extend(req.terms for req in batch)
+        self._refresh_buf.extend(req.terms for req in good)
         if (self.refresh_every is not None
                 and len(self._refresh_buf) >= self.refresh_every):
             self.refresh()

@@ -274,6 +274,72 @@ def test_psum_axis_defers_to_ir_checker():
 
 
 # ---------------------------------------------------------------------------
+# exception-hygiene
+# ---------------------------------------------------------------------------
+
+DATA = "src/repro/data/fixture.py"        # inside exception-hygiene's scope
+
+
+def test_exception_hygiene_flags_bare_and_swallowed():
+    src = (
+        "def f():\n"
+        "    try:\n"
+        "        g()\n"
+        "    except:\n"
+        "        pass\n"
+        "    try:\n"
+        "        g()\n"
+        "    except Exception:\n"
+        "        pass\n"
+    )
+    findings = active(analyze_source(src, path=DATA), "exception-hygiene")
+    assert len(findings) == 2
+    assert "bare" in findings[0].message
+    assert "swallows" in findings[1].message
+
+
+def test_exception_hygiene_accepts_reported_and_narrow_handlers():
+    src = (
+        "def f():\n"
+        "    try:\n"
+        "        g()\n"
+        "    except OSError:\n"          # narrow: fine
+        "        retry()\n"
+        "    try:\n"
+        "        g()\n"
+        "    except Exception as exc:\n"  # chained: fine
+        "        raise RuntimeError('ctx') from exc\n"
+        "    try:\n"
+        "        g()\n"
+        "    except Exception as exc:\n"  # enqueued for the consumer: fine
+        "        q.put((None, exc))\n"
+        "    try:\n"
+        "        g()\n"
+        "    except Exception:\n"         # warned: fine
+        "        warnings.warn('degraded')\n"
+    )
+    assert not active(analyze_source(src, path=DATA), "exception-hygiene")
+
+
+def test_exception_hygiene_scoped_to_core_packages():
+    src = "def f():\n    try:\n        g()\n    except:\n        pass\n"
+    assert active(analyze_source(src, path=DATA), "exception-hygiene")
+    assert not active(analyze_source(src, path=COLD), "exception-hygiene")
+
+
+def test_exception_hygiene_waivable_with_reason():
+    src = ("def f():\n"
+           "    try:\n"
+           "        g()\n"
+           "    except Exception:  # repro: "
+           "allow[exception-hygiene] fallback label is always correct\n"
+           "        x = 1\n")
+    findings = analyze_source(src, path=DATA)
+    (f,) = [x for x in findings if x.rule == "exception-hygiene"]
+    assert f.suppressed and f.reason
+
+
+# ---------------------------------------------------------------------------
 # the suppression ledger's own hygiene
 # ---------------------------------------------------------------------------
 
